@@ -1,0 +1,36 @@
+"""Fig. 4(b): macro utilization vs EDP trade-off for a representative layer
+(WS maximizes spatial utilization but lands on a worse EDP; MIREDO trades a
+little utilization for a much better system-level point)."""
+
+from __future__ import annotations
+
+from benchmarks.common import md_table, solve_cached, write_report
+from repro.core.arch import default_arch
+from repro.core.workload import resnet18
+
+
+def run(budget_s: float = 60.0, layer_name: str = "conv3_x") -> dict:
+    arch = default_arch()
+    layer = next(l for l in resnet18() if l.name == layer_name)
+    rows = []
+    recs = {}
+    for mode in ("greedy", "ws", "heuristic", "miredo"):
+        r = solve_cached(layer, arch, mode, budget_s=budget_s)
+        recs[mode] = r
+        rows.append([mode, f"{r['spatial_util']:.3f}",
+                     f"{r['temporal_util']:.3f}", f"{r['cycles']:.4g}",
+                     f"{r['edp']:.4g}"])
+    payload = {"layer": layer_name, "rows": rows,
+               "edp_gain_vs_ws": recs["ws"]["edp"] / recs["miredo"]["edp"],
+               "edp_gain_vs_heuristic":
+                   recs["heuristic"]["edp"] / recs["miredo"]["edp"]}
+    write_report("fig4b_utilization_edp", payload)
+    print(md_table(["dataflow", "spatial util", "temporal util", "cycles",
+                    "EDP"], rows))
+    print(f"\nEDP reduction vs WS: {payload['edp_gain_vs_ws']:.2f}x, "
+          f"vs heuristic: {payload['edp_gain_vs_heuristic']:.2f}x")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Fig. 4(c): per-layer latency of MIREDO vs the ZigZag-style heuristic vs
+the constrained weight-stationary dataflow, on ResNet-18."""
+
+from __future__ import annotations
+
+from benchmarks.common import md_table, solve_cached, write_report
+from repro.core.arch import default_arch
+from repro.core.workload import RESNET18_MULTIPLICITY, resnet18
+
+
+def run(budget_s: float = 60.0) -> dict:
+    arch = default_arch()
+    rows = []
+    total = {"miredo": 0.0, "ws": 0.0, "heuristic": 0.0}
+    for layer in resnet18():
+        recs = {m: solve_cached(layer, arch, m, budget_s=budget_s)
+                for m in ("miredo", "ws", "heuristic")}
+        mult = RESNET18_MULTIPLICITY.get(layer.name, 1)
+        for m in total:
+            total[m] += recs[m]["cycles"] * mult
+        rows.append([
+            layer.name,
+            f"{recs['heuristic']['cycles']:.3g}",
+            f"{recs['ws']['cycles']:.3g}",
+            f"{recs['miredo']['cycles']:.3g}",
+            f"{recs['heuristic']['cycles'] / recs['miredo']['cycles']:.2f}x",
+            f"{recs['ws']['cycles'] / recs['miredo']['cycles']:.2f}x",
+        ])
+    rows.append(["TOTAL(weighted)", f"{total['heuristic']:.4g}",
+                 f"{total['ws']:.4g}", f"{total['miredo']:.4g}",
+                 f"{total['heuristic'] / total['miredo']:.2f}x",
+                 f"{total['ws'] / total['miredo']:.2f}x"])
+    payload = {"rows": rows, "totals": total,
+               "speedup_vs_heuristic": total["heuristic"] / total["miredo"],
+               "speedup_vs_ws": total["ws"] / total["miredo"]}
+    write_report("fig4c_per_layer", payload)
+    print(md_table(["layer", "heuristic", "WS", "MIREDO",
+                    "speedup vs heur", "speedup vs WS"], rows))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Fig. 5(a): EDP reduction of MIREDO vs the ZigZag-style heuristic across
+DNN models (paper: 1.6x – 3.2x), extended with this repo's assigned
+LM-architecture block workloads."""
+
+from __future__ import annotations
+
+from benchmarks.common import md_table, solve_cached, write_report
+from repro.core.arch import default_arch
+from repro.core.workload import (MODEL_ZOO, lm_block_gemms)
+
+
+def model_workloads(quick: bool = False) -> dict:
+    out = {
+        "resnet18": MODEL_ZOO["resnet18"](),
+        "mobilenetv2": MODEL_ZOO["mobilenetv2"](),
+        "bert-base": MODEL_ZOO["bert-base"](),
+    }
+    if not quick:
+        out["resnet50"] = MODEL_ZOO["resnet50"]()
+        out["vgg16"] = MODEL_ZOO["vgg16"]()
+        # assigned-arch LM blocks through the same CIM optimizer
+        out["minicpm-2b-block"] = lm_block_gemms(
+            "minicpm", 2304, 36, 36, 5760, seq=256)
+        out["qwen2-moe-block"] = lm_block_gemms(
+            "qwen2moe", 2048, 16, 16, 1408, seq=256, n_experts=60, top_k=4)
+    return out
+
+
+def run(budget_s: float = 45.0, quick: bool = False) -> dict:
+    arch = default_arch()
+    rows, ratios = [], {}
+    for model, layers in model_workloads(quick).items():
+        edp_m = edp_h = 0.0
+        for layer in layers:
+            rm = solve_cached(layer, arch, "miredo", budget_s=budget_s)
+            rh = solve_cached(layer, arch, "heuristic", budget_s=budget_s)
+            edp_m += rm["edp"]
+            edp_h += rh["edp"]
+        ratios[model] = edp_h / edp_m
+        rows.append([model, f"{edp_h:.4g}", f"{edp_m:.4g}",
+                     f"{ratios[model]:.2f}x"])
+    payload = {"rows": rows, "ratios": ratios,
+               "paper_claim": "1.6x-3.2x EDP reduction"}
+    write_report("fig5a_models", payload)
+    print(md_table(["model", "heuristic EDP", "MIREDO EDP", "reduction"],
+                   rows))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

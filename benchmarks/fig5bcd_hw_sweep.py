@@ -1,0 +1,60 @@
+"""Fig. 5(b–d): robustness across hardware configurations — macro geometry,
+core count, buffer capacities (paper shows consistent EDP reductions)."""
+
+from __future__ import annotations
+
+from benchmarks.common import md_table, solve_cached, write_report
+from repro.core.arch import default_arch
+from repro.core.workload import resnet18
+
+SWEEPS = {
+    "macro": [
+        ("64x32", dict(macro_rows=64, macro_cols=32)),
+        ("128x32", dict(macro_rows=128, macro_cols=32)),
+        ("256x64", dict(macro_rows=256, macro_cols=64)),
+    ],
+    "cores": [
+        ("4", dict(n_cores=4)),
+        ("8", dict(n_cores=8)),
+        ("16", dict(n_cores=16)),
+    ],
+    "gbuf": [
+        ("4KB", dict(gbuf_kb=4)),
+        ("8KB", dict(gbuf_kb=8)),
+        ("32KB", dict(gbuf_kb=32)),
+    ],
+}
+
+# representative subset (multiplicity-weighted layers dominate ResNet-18)
+LAYERS = ("conv2_x", "conv3_x", "conv4_x", "conv5_x")
+
+
+def run(budget_s: float = 45.0, quick: bool = False) -> dict:
+    layers = [l for l in resnet18() if l.name in LAYERS]
+    if quick:
+        layers = layers[:2]
+    rows = []
+    results = {}
+    for sweep, variants in SWEEPS.items():
+        for tag, kw in variants:
+            arch = default_arch(name=f"{sweep}-{tag}", **kw)
+            edp_m = edp_h = 0.0
+            for layer in layers:
+                rm = solve_cached(layer, arch, "miredo", budget_s=budget_s)
+                rh = solve_cached(layer, arch, "heuristic",
+                                  budget_s=budget_s)
+                edp_m += rm["edp"]
+                edp_h += rh["edp"]
+            ratio = edp_h / edp_m
+            results[f"{sweep}/{tag}"] = ratio
+            rows.append([sweep, tag, f"{edp_h:.4g}", f"{edp_m:.4g}",
+                         f"{ratio:.2f}x"])
+    payload = {"rows": rows, "ratios": results}
+    write_report("fig5bcd_hw_sweep", payload)
+    print(md_table(["sweep", "config", "heuristic EDP", "MIREDO EDP",
+                    "reduction"], rows))
+    return payload
+
+
+if __name__ == "__main__":
+    run()

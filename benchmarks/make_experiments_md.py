@@ -1,0 +1,148 @@
+"""Assemble EXPERIMENTS.md from reports/ artifacts (dry-run, roofline,
+benchmarks, perf iterations). Narrative sections live in
+benchmarks/experiments_narrative.md and are included verbatim.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments_md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.roofline import format_table, load_reports, roofline_terms
+
+
+def dryrun_summary(report_dir="reports/dryrun") -> str:
+    recs = load_reports(report_dir)
+    n_ok = sum(r["status"] == "ok" for r in recs)
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    n_err = sum(r["status"] == "error" for r in recs)
+    lines = [f"Cells lowered+compiled: **{n_ok} ok**, {n_skip} skipped "
+             f"(assignment rule), {n_err} errors, of {len(recs)} total.",
+             "",
+             "| arch | shape | mesh | status | compile s | HBM GB/dev |",
+             "|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"],
+                                         r["multi_pod"])):
+        mesh = "2x16x16" if r["multi_pod"] else "16x16"
+        if r["status"] == "ok":
+            t = roofline_terms(r)
+            hbm = f"{t['hbm_gb_per_device']:.2f}"
+        else:
+            hbm = "-"
+        note = r["status"] if r["status"] != "error" else \
+            "error: " + r.get("error", "")[:60]
+        lines.append(f"| {r['arch']} | {r['shape']} | {mesh} | {note} | "
+                     f"{r.get('seconds', '-')} | {hbm} |")
+    return "\n".join(lines)
+
+
+def bench_section() -> str:
+    out = []
+    path = "reports/benchmarks"
+    def load(name):
+        p = os.path.join(path, name + ".json")
+        return json.load(open(p)) if os.path.exists(p) else None
+
+    f4a = load("fig4a_model_accuracy")
+    if f4a:
+        out.append(f"**Fig 4(a) — analytical model accuracy:** "
+                   f"{f4a['mean_accuracy']:.3f} mean over "
+                   f"{f4a['n_points']} (layer, mapping) points "
+                   f"(paper: 0.955).")
+    f4b = load("fig4b_utilization_edp")
+    if f4b:
+        out.append(f"**Fig 4(b) — utilization/EDP trade-off "
+                   f"({f4b['layer']}):** EDP reduction "
+                   f"{f4b['edp_gain_vs_ws']:.2f}x vs WS, "
+                   f"{f4b['edp_gain_vs_heuristic']:.2f}x vs heuristic.")
+    f4c = load("fig4c_per_layer")
+    if f4c:
+        out.append(f"**Fig 4(c) — ResNet-18 network latency:** "
+                   f"{f4c['speedup_vs_heuristic']:.2f}x vs heuristic, "
+                   f"{f4c['speedup_vs_ws']:.2f}x vs WS (multiplicity-"
+                   f"weighted sum over layers).")
+    f5a = load("fig5a_models")
+    if f5a:
+        rats = ", ".join(f"{k} {v:.2f}x" for k, v in f5a["ratios"].items())
+        out.append(f"**Fig 5(a) — EDP reduction across models** "
+                   f"(paper: 1.6–3.2x): {rats}.")
+    f5b = load("fig5bcd_hw_sweep")
+    if f5b:
+        rats = ", ".join(f"{k} {v:.2f}x" for k, v in f5b["ratios"].items())
+        out.append(f"**Fig 5(b–d) — hardware robustness:** {rats}.")
+    ff = load("tab_flexfact")
+    if ff:
+        out.append("**Flexible Factorization ablation** (conv4_x): see "
+                   "`reports/benchmarks/tab_flexfact.json`.")
+    tb = load("tpu_bridge")
+    if tb:
+        out.append("**TPU bridge (beyond paper):** MIP-selected Pallas "
+                   "blocks per arch in `reports/benchmarks/tpu_bridge.json`"
+                   f"; flash blocks @32k = {tb['flash_blocks_32k']}.")
+    return "\n\n".join(out)
+
+
+def perf_section() -> str:
+    rows = []
+    for p in sorted(glob.glob("reports/perf/*.json")):
+        r = json.load(open(p))
+        b, a = r.get("before"), r.get("after")
+        if not a:
+            rows.append(f"- `{r['cell']}` / **{r['variant']}** — FAILED "
+                        f"({r['after_raw'].get('error', '')[:80]})")
+            continue
+        def fmt(t):
+            return (f"comp {t['t_compute_s']*1e3:.1f}ms, "
+                    f"mem {t['t_memory_s']*1e3:.1f}ms, "
+                    f"coll {t['t_collective_s']*1e3:.1f}ms, "
+                    f"HBM {t['hbm_gb_per_device']:.1f}GB, "
+                    f"frac {t['roofline_fraction']:.4f}")
+        before = fmt(b) if b and b.get("status") == "ok" else "n/a"
+        rows.append(
+            f"- `{r['cell']}` / **{r['variant']}** — {r['hypothesis']}\n"
+            f"  - before: {before}\n  - after:  {fmt(a)}")
+    return "\n".join(rows) if rows else "(populated by perf_hillclimb runs)"
+
+
+def main():
+    narrative = ""
+    np_path = "benchmarks/experiments_narrative.md"
+    if os.path.exists(np_path):
+        narrative = open(np_path).read()
+    doc = f"""# EXPERIMENTS
+
+{narrative}
+
+## §Dry-run (deliverable e)
+
+{dryrun_summary()}
+
+## §Roofline (deliverable g) — single-pod (16, 16) = 256 chips
+
+Hardware constants: 197 TFLOP/s bf16, 819 GB/s HBM, 4x50 GB/s ICI per chip.
+
+{format_table('reports/dryrun', multi_pod=False)}
+
+### Multi-pod (2, 16, 16) = 512 chips — lowering/compile proof
+
+{format_table('reports/dryrun', multi_pod=True)}
+
+## §Paper validation (deliverables b, d)
+
+{bench_section()}
+
+## §Perf (hillclimb iterations)
+
+{perf_section()}
+"""
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md written",
+          f"({len(doc.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

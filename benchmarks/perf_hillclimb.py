@@ -1,0 +1,145 @@
+"""§Perf hillclimb harness: re-lower a cell under an optimization variant
+and diff its roofline terms against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_hillclimb \
+        --cell arctic-480b:train_4k:single --variant moe-scatter
+
+Variants flip the library's implementation switches (module flags /
+config transforms / step overrides); every run appends a
+hypothesis->before->after record to reports/perf/<cell>__<variant>.json.
+"""
+
+# must precede jax import (device count lock) — delegated to dryrun
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+import argparse
+import dataclasses
+import json
+import os
+
+import repro.models.attention as attn_mod
+import repro.models.moe as moe_mod
+import repro.train.optimizer as opt_mod
+import jax.numpy as _jnp
+from repro.launch.roofline import roofline_terms
+
+
+def _pad_heads(cfg):
+    ms = 16
+    nh = ((cfg.n_heads + ms - 1) // ms) * ms
+    return dataclasses.replace(cfg, n_heads=nh, n_kv_heads=nh
+                               if cfg.n_kv_heads == cfg.n_heads
+                               else cfg.n_kv_heads)
+
+
+VARIANTS = {
+    "moe-scatter": dict(flags={(moe_mod, "MOE_DISPATCH"): "scatter"},
+                        hypothesis="sorted scatter/gather dispatch removes "
+                        "the O(T*E*C) one-hot dispatch tensors -> memory "
+                        "term and HBM footprint collapse"),
+    "attn-chunked": dict(flags={(attn_mod, "ATTN_IMPL"): "chunked"},
+                         hypothesis="online-softmax KV-block scan never "
+                         "materializes the (Lq,Lk) f32 scores -> memory "
+                         "term drops on >=4k-seq attention cells"),
+    "kv-int8": dict(flags={(attn_mod, "KV_QUANT"): True},
+                    hypothesis="int8 KV cache halves decode cache "
+                    "footprint (capacity; traffic needs the fused kernel)"),
+    "pad-heads": dict(cfg_transform=_pad_heads,
+                      hypothesis="padding heads to a multiple of the model "
+                      "axis enables attention TP instead of replicated "
+                      "attention compute: ~16x less per-device attn work "
+                      "for <=14% padded-FLOP overhead"),
+    "no-remat": dict(step_overrides={"remat": False},
+                     hypothesis="without recompute the memory term drops "
+                     "~25% at the cost of activation residency"),
+    "combo-best": dict(flags={(moe_mod, "MOE_DISPATCH"): "scatter",
+                              (attn_mod, "ATTN_IMPL"): "chunked"},
+                       hypothesis="stack the winning moves"),
+    "pad-chunked": dict(cfg_transform=_pad_heads,
+                        flags={(attn_mod, "ATTN_IMPL"): "chunked"},
+                        hypothesis="attention TP via head padding + "
+                        "online-softmax chunks: both the replicated "
+                        "compute and the L2 score materialization go"),
+    "combo-opt16": dict(flags={(moe_mod, "MOE_DISPATCH"): "scatter",
+                               (attn_mod, "ATTN_IMPL"): "chunked",
+                               (opt_mod, "OPT_STATE_DTYPE"): _jnp.bfloat16},
+                        hypothesis="scatter dispatch + chunked attention + "
+                        "bf16 Adam moments: 480B params' optimizer slab "
+                        "drops from 22.5 to ~15 GB/dev, under the v5e "
+                        "16 GB HBM budget"),
+}
+
+
+def run_variant(cell: str, variant: str, out_dir: str = "reports/perf",
+                baseline_dir: str = "reports/dryrun") -> dict:
+    arch, shape, mesh = cell.split(":")
+    multi = mesh == "multi"
+    spec = VARIANTS[variant]
+    flags = spec.get("flags", {})
+    old = {}
+    for (mod, name), val in flags.items():
+        old[(mod, name)] = getattr(mod, name)
+        setattr(mod, name, val)
+    try:
+        rec = dryrun.lower_cell(
+            arch, shape, multi_pod=multi,
+            step_overrides=spec.get("step_overrides"),
+            plan_overrides=spec.get("plan_overrides"),
+            cfg_transform=spec.get("cfg_transform"))
+    finally:
+        for (mod, name), val in old.items():
+            setattr(mod, name, val)
+    base_path = os.path.join(
+        baseline_dir, f"{arch}__{shape}__{mesh}.json")
+    base = json.load(open(base_path)) if os.path.exists(base_path) else None
+    result = {
+        "cell": cell,
+        "variant": variant,
+        "hypothesis": spec.get("hypothesis", ""),
+        "after_raw": {k: rec.get(k) for k in
+                      ("flops_per_device", "bytes_per_device",
+                       "collective_bytes_per_device", "memory", "status",
+                       "error")},
+        "after": roofline_terms(rec) if rec.get("status") == "ok" else None,
+        "before": roofline_terms(base) if base else None,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir,
+                        f"{arch}__{shape}__{mesh}__{variant}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    _print_delta(result)
+    return result
+
+
+def _print_delta(r):
+    print(f"\n== {r['cell']} / {r['variant']}")
+    print(f"   hypothesis: {r['hypothesis']}")
+    b, a = r["before"], r["after"]
+    if not a:
+        print("   AFTER FAILED:", r["after_raw"].get("error", "?")[:200])
+        return
+    if not b or b.get("status") != "ok":
+        print("   (no baseline)")
+        b = None
+    higher_better = {"roofline_fraction", "useful_compute_ratio"}
+    for term in ("t_compute_s", "t_memory_s", "t_collective_s",
+                 "hbm_gb_per_device", "roofline_fraction"):
+        before = f"{b[term]:.4g}" if b else "-"
+        delta = ""
+        if b and a[term] > 0 and b[term] > 0:
+            ratio = a[term] / b[term] if term in higher_better \
+                else b[term] / a[term]
+            delta = f" ({ratio:.2f}x better)" if ratio > 1.001 else (
+                f" ({1/ratio:.2f}x WORSE)" if ratio < 0.999 else "")
+        print(f"   {term:<22} {before:>12} -> {a[term]:.4g}{delta}")
+    print(f"   dominant: {b['dominant'] if b else '?'} -> {a['dominant']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch:shape:single|multi")
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    a = ap.parse_args()
+    run_variant(a.cell, a.variant)

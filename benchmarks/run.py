@@ -1,0 +1,61 @@
+"""Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``
+
+One benchmark per paper table/figure (+ the beyond-paper TPU bridge).
+``--quick`` trims solve budgets; results cache under reports/cache so
+reruns are incremental.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
+                         "flexfact,bridge")
+    args = ap.parse_args(argv)
+    budget = 20.0 if args.quick else 60.0
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (fig4a_model_accuracy, fig4b_utilization_edp,
+                            fig4c_per_layer, fig5a_models, fig5bcd_hw_sweep,
+                            tab_flexfact, tpu_bridge_bench)
+
+    jobs = [
+        ("fig4a", lambda: fig4a_model_accuracy.run(
+            budget_mappings=24 if args.quick else 60)),
+        ("fig4b", lambda: fig4b_utilization_edp.run(budget_s=budget)),
+        ("fig4c", lambda: fig4c_per_layer.run(budget_s=budget)),
+        ("fig5a", lambda: fig5a_models.run(budget_s=budget,
+                                           quick=args.quick)),
+        ("fig5bcd", lambda: fig5bcd_hw_sweep.run(
+            budget_s=budget, quick=args.quick)),
+        ("flexfact", lambda: tab_flexfact.run(budget_s=min(budget, 45.0))),
+        ("bridge", tpu_bridge_bench.run),
+    ]
+    failures = []
+    for name, fn in jobs:
+        if only and name not in only:
+            continue
+        print(f"\n{'='*70}\n== {name}\n{'='*70}", flush=True)
+        t0 = time.monotonic()
+        try:
+            fn()
+            print(f"[{name}] done in {time.monotonic()-t0:.0f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"\nFAILED: {failures}")
+        return 1
+    print("\nAll benchmarks complete; JSON under reports/benchmarks/.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

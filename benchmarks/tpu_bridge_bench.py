@@ -1,0 +1,45 @@
+"""MIREDO TPU bridge (beyond paper): MIP-selected Pallas block shapes for
+the assigned architectures' dominant GEMMs; VMEM fit + traffic estimates,
+compared against naive maximal blocks."""
+
+from __future__ import annotations
+
+from benchmarks.common import md_table, write_report
+from repro.configs import ARCH_IDS, get_config
+from repro.core.tpu_bridge import (VMEM_BYTES, select_flash_blocks,
+                                   select_matmul_blocks)
+
+
+def dominant_gemm(cfg) -> tuple[int, int, int]:
+    """Per-device FFN up-projection GEMM under the production sharding
+    (TP=16 on d_ff, tokens/device for train_4k)."""
+    tokens = 256 * 4096 // 16           # per data-rank
+    ff = (cfg.moe_d_ff or cfg.d_ff or cfg.ssm_expand * cfg.d_model)
+    return tokens, cfg.d_model, max(ff // 16, 128)
+
+
+def run() -> dict:
+    rows = []
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        m, k, n = dominant_gemm(cfg)
+        choice = select_matmul_blocks(m, k, n)
+        fit = "OK" if (2 - (not choice.double_buffered)) * \
+            choice.vmem_bytes <= VMEM_BYTES else "OVER"
+        rows.append([arch_id, f"{m}x{k}x{n}",
+                     f"({choice.bm},{choice.bk},{choice.bn})",
+                     "dbl" if choice.double_buffered else "single",
+                     f"{choice.vmem_bytes/2**20:.1f}MiB", fit,
+                     f"{choice.est_seconds*1e6:.1f}us", choice.status])
+    bq, bk = select_flash_blocks(32768, 32768, 128)
+    payload = {"rows": rows, "flash_blocks_32k": [bq, bk]}
+    write_report("tpu_bridge", payload)
+    print(md_table(["arch", "GEMM m*k*n", "blocks", "buf", "VMEM", "fit",
+                    "est t", "solver"], rows))
+    print(f"\nflash-attention blocks @32k/hd128 (eq.9 fit): "
+          f"block_q={bq}, block_k={bk}")
+    return payload
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Full-network pipeline: optimize every ResNet-18 layer (the paper's
+baseline workload, §V-A) end to end and report network-level latency/EDP
+against the ZigZag-style heuristic and the WS dataflow.
+
+    PYTHONPATH=src python examples/resnet18_pipeline.py [--budget 45]
+"""
+
+import argparse
+
+from benchmarks.common import solve_cached
+from repro.core.arch import default_arch
+from repro.core.workload import RESNET18_MULTIPLICITY, resnet18
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--budget", type=float, default=45.0)
+    args = ap.parse_args()
+    arch = default_arch()
+    totals = {m: {"cycles": 0.0, "edp": 0.0}
+              for m in ("heuristic", "ws", "miredo")}
+    print(f"{'layer':<12} {'heuristic':>12} {'WS':>12} {'MIREDO':>12} "
+          f"{'speedup':>8}")
+    for layer in resnet18():
+        mult = RESNET18_MULTIPLICITY.get(layer.name, 1)
+        recs = {m: solve_cached(layer, arch, m, budget_s=args.budget)
+                for m in totals}
+        for m in totals:
+            totals[m]["cycles"] += recs[m]["cycles"] * mult
+            totals[m]["edp"] += recs[m]["edp"] * mult
+        print(f"{layer.name:<12} {recs['heuristic']['cycles']:>12,.0f} "
+              f"{recs['ws']['cycles']:>12,.0f} "
+              f"{recs['miredo']['cycles']:>12,.0f} "
+              f"{recs['heuristic']['cycles']/recs['miredo']['cycles']:>7.2f}x")
+    print("-" * 60)
+    print(f"network latency: heuristic {totals['heuristic']['cycles']:,.0f} "
+          f"| WS {totals['ws']['cycles']:,.0f} "
+          f"| MIREDO {totals['miredo']['cycles']:,.0f}")
+    print(f"network EDP reduction vs heuristic: "
+          f"{totals['heuristic']['edp']/totals['miredo']['edp']:.2f}x, "
+          f"vs WS: {totals['ws']['edp']/totals['miredo']['edp']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Serving example: prefill + batched autoregressive decode with KV caches
+(reduced glm4-9b config on CPU; the same step functions the dry-run lowers
+for the production mesh).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.train.steps import (StepConfig, init_train_state,
+                               make_decode_step, make_prefill_step)
+
+
+def main():
+    cfg = get_config("glm4-9b").reduced()
+    step_cfg = StepConfig(remat=False, compute_dtype=jnp.float32)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, step_cfg)
+    params = state.params
+    batch, prompt_len, gen_len, max_seq = 4, 12, 20, 64
+
+    rng = np.random.default_rng(0)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                      (batch, prompt_len)), jnp.int32)
+    prefill = jax.jit(make_prefill_step(cfg, step_cfg))
+    decode = jax.jit(make_decode_step(cfg, step_cfg))
+
+    t0 = time.monotonic()
+    logits, caches = prefill(params, {"tokens": prompt})
+    # pad caches to max_seq so decode can append
+    def pad(t):
+        if t.ndim == 5 and t.shape[2] == prompt_len:
+            return jnp.pad(t, [(0, 0), (0, 0),
+                               (0, max_seq - prompt_len), (0, 0), (0, 0)])
+        return t
+    caches = jax.tree.map(pad, caches)
+    print(f"prefill {batch}x{prompt_len}: {time.monotonic()-t0:.2f}s")
+
+    toks = [jnp.argmax(logits, -1).astype(jnp.int32)[:, None]]
+    t0 = time.monotonic()
+    for _ in range(gen_len):
+        logits, caches = decode(params, {"tokens": toks[-1]}, caches)
+        toks.append(jnp.argmax(logits, -1).astype(jnp.int32)[:, None])
+    dt = time.monotonic() - t0
+    out = jnp.concatenate(toks, axis=1)
+    print(f"decoded {gen_len} tokens/seq x {batch} seqs in {dt:.2f}s "
+          f"({batch*gen_len/dt:.1f} tok/s on CPU)")
+    print("sample token ids:", np.asarray(out[0])[:12], "...")
+    assert out.shape == (batch, gen_len + 1)
+    assert np.all(np.asarray(out) >= 0)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

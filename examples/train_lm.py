@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+the full production stack (sharded init, deterministic data pipeline,
+checkpoint/restart, WSD schedule) — on CPU with a width-reduced config.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Loss must drop substantially (the synthetic stream is a learnable Markov
+process); the script asserts it and demonstrates a mid-run restart from
+the checkpoint.
+"""
+
+import argparse
+import dataclasses
+import shutil
+import tempfile
+
+from repro.configs import get_config
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        # Phase 1: train to 60% of steps, checkpointing.
+        mid = int(args.steps * 0.6)
+        losses1 = train_main([
+            "--arch", "minicpm-2b", "--reduced",
+            "--steps", str(mid), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "50",
+        ])
+        print(f"\n--- simulating failure + restart from {ckpt_dir} ---\n")
+        # Phase 2: 'restart' — resumes from the latest checkpoint.
+        losses2 = train_main([
+            "--arch", "minicpm-2b", "--reduced",
+            "--steps", str(args.steps), "--batch", str(args.batch),
+            "--seq", str(args.seq), "--ckpt-dir", ckpt_dir,
+            "--ckpt-every", "50",
+        ])
+        first = sum(losses1[:10]) / 10
+        last = sum(losses2[-10:]) / 10
+        print(f"\nloss {first:.3f} -> {last:.3f}")
+        assert last < first * 0.7, "training did not converge"
+        print("OK: loss decreased through a checkpoint restart.")
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""repro: MIREDO (MIP-driven CIM dataflow optimization) as a JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,3 @@
+from repro.configs.base import (ModelConfig, ShapeSpec, SHAPES,
+                                applicable_shapes)
+from repro.configs.registry import ARCH_IDS, all_configs, get_config

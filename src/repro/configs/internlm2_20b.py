@@ -1,0 +1,17 @@
+"""InternLM2-20B [arXiv:2403.17297; hf] — dense GQA transformer."""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92544,
+    gated_mlp=True,
+    rope_theta=1_000_000.0,
+    source="arXiv:2403.17297; hf:internlm/internlm2-20b",
+)

@@ -1,0 +1,6 @@
+"""MIREDO core: the paper's contribution (arch abstraction, flexible
+factorization, analytical latency model, MIP formulation, baselines)."""
+
+from repro.core.arch import CimArch, default_arch, INPUT, WEIGHT, OUTPUT
+from repro.core.workload import Layer, conv, gemm
+from repro.core.mapping import Mapping

@@ -1,0 +1,206 @@
+"""Analytical latency model (paper §IV-D, Table III) — direct evaluator.
+
+This module is the *semantic oracle*: the MIP in ``formulation.py`` encodes
+exactly this recursion with big-M row selection, the heuristic baselines call
+it directly, and ``simulator.py`` validates it event-by-event (Fig. 4(a)).
+
+Recursion, innermost MVM upward (i = temporal slot index, λ = operand):
+
+    L_{imax+1} = P_{imax+1,λ} = L_MVM                      (boundary)
+    L_i  = max( L_{i+1} * N_{i+1},  max_λ combined(i, λ) )
+    combined = P_{i+1,λ}                    (no transfer at this slot)
+             | T_{i,λ} + P_{i+1,λ}          (single-buffered transfer)
+             | max(T_{i,λ}, P_{i+1,λ})      (double-buffered transfer)
+    P_{i,λ} = Table III row (single/double × I,W / O, or no-transfer)
+    total   = max_λ P_{0,λ} + one-time fills
+
+Transfer placement: slot i carries a transfer for λ iff its dim is relevant
+to λ (otherwise the operand is *data-stationary* across the slot: "incurs no
+transfer latency") and some used level lies below the slot's level. The chunk
+is B^T of the slot's level; weight transfers whose destination is the CIM
+macro pay ``mode_switch_cycles`` on top (Memory-mode reload, Fig. 2(a)) and
+are never overlapped.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import workload as wl
+from repro.core.arch import CimArch, INPUT, OPERANDS, OUTPUT, WEIGHT
+from repro.core.mapping import Mapping
+
+
+@dataclasses.dataclass
+class SlotInfo:
+    dim: str
+    n: int
+    level: dict[str, int]
+    transfer: dict[str, float]      # T_{i,λ} in cycles (0 = no transfer)
+    double: dict[str, bool]         # psi^DL_{i,λ}
+
+
+@dataclasses.dataclass
+class LatencyReport:
+    total_cycles: float
+    p0: dict[str, float]
+    one_time_cycles: float
+    slots: list[SlotInfo]
+    l_path: list[float]             # L_i per slot
+    spatial_util: float             # used PE lanes / physical lanes
+    temporal_util: float            # ideal busy cycles / total cycles
+    macs: int
+
+    @property
+    def ideal_cycles(self) -> float:
+        return self.total_cycles * self.temporal_util
+
+
+def transfer_cycles(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                    operand: str, slot: int) -> float:
+    """T_{i,λ} per eq. (11): chunk bytes / source-level effective bandwidth,
+    plus the Memory-mode switch penalty for weight reloads into the macro."""
+    m = mapping.level_of[operand][slot]
+    chunk = mapping.transfer_bytes(layer, operand, arch, m)
+    bw = mapping.eff_bw_bytes(arch, m)
+    t = math.ceil(chunk / bw)
+    dest = mapping.next_used_below(operand, m)
+    if operand == WEIGHT and dest == arch.macro_level:
+        t += arch.mode_switch_cycles
+    return float(t)
+
+
+def analyze_slots(mapping: Mapping, layer: wl.Layer,
+                  arch: CimArch) -> list[SlotInfo]:
+    slots = []
+    for i, (dim, n) in enumerate(mapping.temporal):
+        level = {lam: mapping.level_of[lam][i] for lam in OPERANDS}
+        transfer, double = {}, {}
+        for lam in OPERANDS:
+            m = level[lam]
+            dest = mapping.next_used_below(lam, m)
+            has = wl.is_relevant(dim, lam) and dest is not None
+            transfer[lam] = transfer_cycles(mapping, layer, arch, lam, i) \
+                if has else 0.0
+            dbl = has and dest is not None and \
+                mapping.is_double_buffered(lam, dest, arch)
+            if lam == WEIGHT and dest == arch.macro_level:
+                dbl = False  # mode exclusivity
+            double[lam] = dbl
+        slots.append(SlotInfo(dim, n, level, transfer, double))
+    return slots
+
+
+def _row(operand: str, t: float, dbl: bool, l_i: float, n: float,
+         p_inner: float) -> float:
+    """Table III, verbatim rows with coefficients clamped at >= 0."""
+    c = lambda x: max(x, 0.0)
+    if t == 0.0:
+        return l_i * c(n - 1) + p_inner
+    if not dbl:
+        if operand in (INPUT, WEIGHT):
+            return l_i * c(n - 2) + 2 * t + p_inner
+        return l_i * c(n - 1) + 2 * t + p_inner
+    if operand in (INPUT, WEIGHT):
+        return max(l_i * c(n - 3) + 2 * t + max(t, p_inner), t * n)
+    return l_i * c(n - 2) + t + max(t, l_i) + max(t, p_inner)
+
+
+def evaluate(mapping: Mapping, layer: wl.Layer,
+             arch: CimArch) -> LatencyReport:
+    slots = analyze_slots(mapping, layer, arch)
+    n_slots = len(slots)
+    l_mvm = float(arch.l_mvm_cycles)
+
+    l_next = l_mvm                      # L_{i+1}
+    n_next = 1.0                        # N_{i+1}
+    p_next = {lam: l_mvm for lam in OPERANDS}
+    l_path = [0.0] * n_slots
+
+    for i in range(n_slots - 1, -1, -1):
+        s = slots[i]
+        combined = 0.0
+        for lam in OPERANDS:
+            t = s.transfer[lam]
+            if t == 0.0:
+                combined = max(combined, p_next[lam])
+            elif s.double[lam]:
+                combined = max(combined, max(t, p_next[lam]))
+            else:
+                combined = max(combined, t + p_next[lam])
+        l_i = max(l_next * n_next, combined)
+        l_path[i] = l_i
+        p_cur = {lam: _row(lam, s.transfer[lam], s.double[lam], l_i,
+                           float(s.n), p_next[lam]) for lam in OPERANDS}
+        l_next, n_next, p_next = l_i, float(s.n), p_cur
+
+    # One-time fills: operand hops never triggered by any relevant temporal
+    # slot above the destination (fully-stationary tiles loaded once).
+    one_time = 0.0
+    for lam in OPERANDS:
+        used = mapping.used_levels(lam)
+        for m_prev, m_dst in zip(used, used[1:]):
+            triggered = any(
+                wl.is_relevant(slots[i].dim, lam)
+                and slots[i].level[lam] <= m_prev
+                for i in range(n_slots))
+            if not triggered:
+                chunk = mapping.transfer_bytes(layer, lam, arch, m_prev)
+                t = math.ceil(chunk / mapping.eff_bw_bytes(arch, m_prev))
+                if lam == WEIGHT and m_dst == arch.macro_level:
+                    t += arch.mode_switch_cycles
+                one_time += t
+        # Initial fill of the outermost used level from DRAM if DRAM has no
+        # slots for λ: an (always-untriggered) hop 0 -> used[0], charged at
+        # B^T_0 (full multicast traffic, source precision) — identical to
+        # the MIP's OTC for the DRAM hop.
+        if used and used[0] != 0:
+            chunk = mapping.transfer_bytes(layer, lam, arch, 0)
+            t = math.ceil(chunk / mapping.eff_bw_bytes(arch, 0))
+            if lam == WEIGHT and used[0] == arch.macro_level:
+                t += arch.mode_switch_cycles
+            one_time += t
+
+    total = max(p_next.values()) + one_time
+
+    phys = math.prod(ax.size for ax in arch.spatial)
+    used_lanes = math.prod(
+        mapping.spatial_extent(ax.name) for ax in arch.spatial)
+    spatial_util = used_lanes / phys
+    temporal_iters = math.prod(f for _, f in mapping.temporal)
+    ideal = temporal_iters * l_mvm
+    return LatencyReport(
+        total_cycles=total,
+        p0=p_next,
+        one_time_cycles=one_time,
+        slots=slots,
+        l_path=l_path,
+        spatial_util=spatial_util,
+        temporal_util=min(1.0, ideal / max(total, 1e-9)),
+        macs=layer.macs,
+    )
+
+
+def idealized_cycles(mapping: Mapping, layer: wl.Layer,
+                     arch: CimArch) -> float:
+    """The oversimplified cost model of prior work (paper limitation ❶):
+    latency per level = max(compute, transfer) assuming perfect overlap
+    everywhere. Used by the ZigZag-style heuristic baseline to *pick* its
+    mapping; the resulting mapping is then re-scored with `evaluate`."""
+    temporal_iters = math.prod(f for _, f in mapping.temporal)
+    compute = temporal_iters * arch.l_mvm_cycles
+    worst = compute
+    for lam in OPERANDS:
+        for m in mapping.used_levels(lam):
+            dest = mapping.next_used_below(lam, m)
+            if dest is None:
+                continue
+            # iterations of loops at or above this level that change the tile
+            iters = 1
+            for i, (dim, f) in enumerate(mapping.temporal):
+                if mapping.level_of[lam][i] <= m and wl.is_relevant(dim, lam):
+                    iters *= f
+            chunk = mapping.transfer_bytes(layer, lam, arch, m)
+            worst = max(worst, iters * chunk / mapping.eff_bw_bytes(arch, m))
+    return float(worst)

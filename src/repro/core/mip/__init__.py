@@ -1,0 +1,1 @@
+from repro.core.mip.model import LinExpr, MipModel, Status, Var

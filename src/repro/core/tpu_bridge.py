@@ -1,0 +1,144 @@
+"""MIREDO -> TPU bridge: the paper's MIP machinery re-instantiated over the
+TPU memory hierarchy (HBM -> VMEM -> MXU) to select Pallas kernel block
+shapes (DESIGN.md §3).
+
+The CIM concepts map one-to-one:
+  * eq. (9)  capacity with (1 + psi^DM):  Pallas pipelining double-buffers
+    every operand block in VMEM -> working set counts twice when the
+    transfer/compute overlap is enabled;
+  * Table III single vs double rows:  per-grid-step time is
+    max(T_transfer, T_compute) when pipelined, T_transfer + T_compute when
+    not;
+  * C^X spatial legality:  MXU tiling — lane dim multiples of 128, sublane
+    multiples of 8;
+  * weight-reload mode-switch stall:  the weight block changes every grid
+    step along the reduction axis; re-fetch traffic is modeled in the HBM
+    term exactly like MIREDO models macro reloads.
+
+The resulting MIP is tiny (tens of binaries) and solves in milliseconds;
+``select_matmul_blocks`` feeds kernels/matmul_int8, ``select_flash_blocks``
+feeds kernels/flash_attention.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.mip.model import LinExpr, MipModel, Status
+
+# TPU v5e per-core budgets
+VMEM_BYTES = 64 * 1024 * 1024      # usable VMEM budget (conservative half)
+HBM_BW = 819e9
+MXU_FLOPS = 197e12                 # bf16; int8 ~2x but stay conservative
+LANE = 128
+SUBLANE = 8
+
+
+@dataclasses.dataclass
+class BlockChoice:
+    bm: int
+    bk: int
+    bn: int
+    double_buffered: bool
+    est_seconds: float
+    vmem_bytes: int
+    status: str
+
+
+def _candidates(dim: int, *, align: int, cap: int) -> list[int]:
+    out = [c for c in (128, 256, 512, 1024, 2048)
+           if c <= min(dim, cap) and dim % c == 0 and c % align == 0]
+    if not out:
+        out = [dim if dim % align == 0 else max(align, dim)]
+        out = [c for c in out if dim % c == 0] or [dim]
+    return out
+
+
+def select_matmul_blocks(m: int, k: int, n: int, *,
+                         bytes_in: int = 1, bytes_acc: int = 4,
+                         vmem_bytes: int = VMEM_BYTES,
+                         time_limit_s: float = 5.0) -> BlockChoice:
+    """MIP block-shape selection for the INT8 matmul kernel.
+
+    min  T              (per-step latency bound, eq. 14 latency term)
+    s.t. T >= t_hbm     (+ t_mxu when single-buffered: Table III row select)
+         T >= t_mxu
+         (1 + psi^DM) * working_set(bm, bk, bn) <= VMEM     (eq. 9)
+    """
+    cm = _candidates(m, align=SUBLANE, cap=2048)
+    ck = _candidates(k, align=LANE, cap=2048)
+    cn = _candidates(n, align=LANE, cap=2048)
+    mdl = MipModel("tpu-matmul-blocks")
+    vm = mdl.add_one_hot("bm", len(cm))
+    vk = mdl.add_one_hot("bk", len(ck))
+    vn = mdl.add_one_hot("bn", len(cn))
+    dm = mdl.add_binary("psiDM")
+
+    # HBM traffic (bytes): x re-read N/bn times, w re-read M/bm times,
+    # out written once — the weight-reload analogue.
+    traffic = LinExpr({}, float(m * n * bytes_acc))
+    for c, v in zip(cn, vn):
+        traffic = traffic + (m * k * bytes_in) * (n / c) * v
+    for c, v in zip(cm, vm):
+        traffic = traffic + (k * n * bytes_in) * (m / c) * v
+    t_hbm_scale = 1.0 / HBM_BW
+    t_mxu = 2.0 * m * n * k / MXU_FLOPS
+
+    # working set: bm*bk + bk*bn + bm*bn*acc (+ scales, negligible)
+    # pairwise products of one-hots -> enumerate (tiny sets)
+    ws = mdl.add_var("ws", 0.0, float(vmem_bytes) * 4)
+    for i, cmi in enumerate(cm):
+        for j, ckj in enumerate(ck):
+            for l2, cnl in enumerate(cn):
+                w = cmi * ckj * bytes_in + ckj * cnl * bytes_in + \
+                    cmi * cnl * bytes_acc
+                big = float(vmem_bytes * 8)
+                mdl.add_ge(ws - w + big * (3 - vm[i] - vk[j] - vn[l2]),
+                           0.0)
+    # capacity: ws + psi^DM * ws <= vmem  ->  ws + dbx <= vmem
+    dbx = mdl.add_var("dbx", 0.0, float(vmem_bytes) * 4)
+    mdl.add_ge(dbx - ws + float(vmem_bytes * 8) * (1 - dm * 1.0), 0.0)
+    mdl.add_le(ws + dbx, float(vmem_bytes))
+
+    t = mdl.add_var("T", 0.0, 1e6)
+    # double-buffered: T >= max(t_hbm, t_mxu); single: T >= t_hbm + t_mxu
+    mdl.add_ge(t - t_hbm_scale * traffic, 0.0)
+    mdl.add_ge(t, t_mxu)
+    big_t = 1e3
+    mdl.add_ge(t - t_hbm_scale * traffic - t_mxu - big_t * (dm * 1.0),
+               -0.0)
+    mdl.minimize(t)
+    sol = mdl.solve(time_limit_s=time_limit_s, mip_rel_gap=1e-4)
+    if not sol.ok:
+        return BlockChoice(256, 512, 256, True, math.nan, -1, "fallback")
+    pick = lambda cs, vs: cs[max(range(len(cs)), key=lambda i: sol[vs[i]])]
+    bm_v, bk_v, bn_v = pick(cm, vm), pick(ck, vk), pick(cn, vn)
+    ws_v = bm_v * bk_v * bytes_in + bk_v * bn_v * bytes_in + \
+        bm_v * bn_v * bytes_acc
+    return BlockChoice(bm_v, bk_v, bn_v, sol.binary(dm), sol[t], ws_v,
+                       sol.status.name)
+
+
+def select_flash_blocks(seq_q: int, seq_k: int, head_dim: int, *,
+                        bytes_el: int = 2,
+                        vmem_bytes: int = VMEM_BYTES) -> tuple[int, int]:
+    """Largest (block_q, block_k) whose pipelined working set fits VMEM —
+    the degenerate (single-level) instance of eq. 9; closed-form, no solver
+    needed, but uses the same accounting as select_matmul_blocks."""
+    best = (128, 128)
+    best_steps = math.inf
+    for bq in (1024, 512, 256, 128):
+        if seq_q % bq:
+            continue
+        for bk in (1024, 512, 256, 128):
+            if seq_k % bk:
+                continue
+            ws = (bq * head_dim + 2 * bk * head_dim) * bytes_el + \
+                bq * head_dim * 4 + bq * bk * 4
+            if 2 * ws > vmem_bytes:     # double-buffered pipeline
+                continue
+            steps = (seq_q // bq) * (seq_k // bk)
+            if steps < best_steps:
+                best_steps, best = steps, (bq, bk)
+    return best

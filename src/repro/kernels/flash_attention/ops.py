@@ -1,0 +1,20 @@
+"""Public flash-attention op over (B, L, H, hd) layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool = True) -> jax.Array:
+    """q, k, v: (B, L, H, hd) with H already GQA-expanded."""
+    b, l, h, hd = q.shape
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(b * h, t.shape[1], hd)
+    out = flash_attention_bh(fold(q), fold(k), fold(v), causal=causal,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    return out.reshape(b, h, l, hd).transpose(0, 2, 1, 3)

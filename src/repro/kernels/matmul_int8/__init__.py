@@ -1,0 +1,1 @@
+from repro.kernels.matmul_int8.ops import quantized_matmul

@@ -1,0 +1,40 @@
+"""Public op: quantize-and-matmul with MIREDO-selected block shapes."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul_int8.kernel import matmul_int8
+from repro.kernels.matmul_int8.ref import matmul_int8_ref, quantize_rowwise
+
+
+def quantized_matmul(x: jax.Array, w: jax.Array, *,
+                     block_shapes: tuple[int, int, int] | None = None,
+                     use_kernel: bool = True, interpret: bool = True,
+                     out_dtype=jnp.bfloat16) -> jax.Array:
+    """bf16/f32 (M,K) @ (K,N) via INT8 quantization (CIM-style W8A8).
+
+    ``block_shapes`` come from the MIREDO TPU bridge
+    (core/tpu_bridge.py:select_matmul_blocks); defaults are MXU-aligned.
+    ``interpret=True`` executes the Pallas kernel in Python on CPU (this
+    container has no TPU); on real hardware pass interpret=False.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    x_q, x_s = quantize_rowwise(x, axis=1)
+    w_q, w_s = quantize_rowwise(w, axis=0)
+    if not use_kernel:
+        return matmul_int8_ref(x_q, w_q, x_s, w_s, out_dtype)
+    bm, bk, bn = block_shapes or default_blocks(m, k, n)
+    return matmul_int8(x_q, w_q, x_s, w_s, bm=bm, bk=bk, bn=bn,
+                       out_dtype=out_dtype, interpret=interpret)
+
+
+def default_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    def pick(d, pref):
+        for b in (pref, 512, 256, 128, 64, 32, 16, 8):
+            if d % b == 0 and b <= d:
+                return b
+        return d
+    return pick(m, 256), pick(k, 512), pick(n, 256)

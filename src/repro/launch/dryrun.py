@@ -1,0 +1,380 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set XLA_FLAGS before any jax import (jax locks the device count on
+first init): 512 host-platform devices emulate 2 pods x 256 chips.
+"""
+
+# --- these two lines must run before ANY other import --------------------
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+# --------------------------------------------------------------------------
+
+import argparse
+import gc
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, applicable_shapes, get_config, ARCH_IDS
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import make_production_mesh
+from repro.sharding.rules import make_plan
+from repro.train.optimizer import OptimizerConfig
+from repro.train.steps import (StepConfig, init_caches, init_train_state,
+                               make_decode_step, make_prefill_step,
+                               make_train_step)
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "reports")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = shape.global_batch
+    l = 1 if shape.is_decode else shape.seq_len
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, l), jnp.int32),
+    }
+    if shape.kind == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    if cfg.modality in ("audio", "vision") and not shape.is_decode:
+        specs["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_seq, cfg.d_model), dtype)
+    return specs
+
+
+def _shape_tree(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+
+
+def _sanitize(mesh, spec: P, shape: tuple[int, ...]) -> NamedSharding:
+    """Drop mesh axes from any dim they do not evenly divide (decode steps
+    have degenerate length-1 axes, batch=1 long-context cells, etc.)."""
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for d, size in zip(dims, shape):
+        if d is None:
+            out.append(None)
+            continue
+        axes = d if isinstance(d, tuple) else (d,)
+        keep = []
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if size % n == 0:
+            keep = list(axes)
+        else:
+            # try a prefix of the axis tuple
+            n = 1
+            for a in axes:
+                if size % (n * mesh.shape[a]) == 0:
+                    keep.append(a)
+                    n *= mesh.shape[a]
+                else:
+                    break
+        out.append(tuple(keep) if len(keep) > 1 else
+                   (keep[0] if keep else None))
+    return NamedSharding(mesh, P(*out))
+
+
+def _with_sharding(tree_specs, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_specs, shardings)
+
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f8e4m3": 1,
+               "f8e5m2": 1, "s16": 2, "u16": 2, "c64": 8, "c128": 16}
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-shape bytes of every collective op in the HLO."""
+    out: dict[str, float] = {}
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        shapes_blob, kind = m.group(1), m.group(2)
+        total = 0
+        for sm in SHAPE_RE.finditer(shapes_blob):
+            dt, dims = sm.group(1), sm.group(2)
+            n = 1
+            for d in dims.split(","):
+                if d.strip():
+                    n *= int(d)
+            total += n * DTYPE_BYTES.get(dt, 4)
+        out[kind] = out.get(kind, 0.0) + total
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}
+
+
+def lower_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+               step_overrides: dict | None = None,
+               plan_overrides: dict | None = None,
+               cfg_transform=None) -> dict:
+    """Lower + compile one cell; returns the roofline-input record.
+
+    Three compiles: the production artifact (scan-over-layers: small HLO,
+    exact memory analysis) plus two reduced-depth fully-unrolled compiles
+    (exact flops/bytes/collectives at 1 and 2 layer-units) from which the
+    full-depth costs extrapolate linearly — XLA's cost model counts a
+    while-loop body once regardless of trip count, so rolled-scan costs
+    alone would undercount depth.
+    """
+    import dataclasses as _dc
+
+    from repro.models import transformer as _tf
+
+    t0 = time.monotonic()
+    cfg = get_config(arch_id)
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = SHAPES[shape_name]
+    app = applicable_shapes(cfg)
+    if app[shape_name] is None:
+        return {"arch": arch_id, "shape": shape_name,
+                "multi_pod": multi_pod, "status": "skipped",
+                "reason": "quadratic attention at 512k seq "
+                          "(assignment rule)"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    def one_compile(c: ModelConfig, unroll):
+        _tf.SCAN_UNROLL = unroll
+        try:
+            return _lower_one(c, shape, mesh, step_overrides,
+                              plan_overrides)
+        finally:
+            _tf.SCAN_UNROLL = 1
+
+    # cost slope from two small exact compiles
+    unit = cfg.attn_every if cfg.family == "hybrid" else 1
+    if cfg.family == "encdec":
+        c1 = _dc.replace(cfg, encoder_layers=1, n_layers=1)
+        c2 = _dc.replace(cfg, encoder_layers=2, n_layers=2)
+        n_units = float(cfg.n_layers)   # enc and dec depths are equal (24)
+    else:
+        c1 = _dc.replace(cfg, n_layers=unit)
+        c2 = _dc.replace(cfg, n_layers=2 * unit)
+        n_units = cfg.n_layers / unit
+    f1 = one_compile(c1, True)
+    f2 = one_compile(c2, True)
+
+    def extrap(a, b):
+        # clamp: one-time (depth-independent) costs can make f2 < f1 for a
+        # given collective kind; never extrapolate below the measured floor
+        return max(a + (n_units - 1.0) * (b - a), min(a, b), 0.0)
+
+    flops = extrap(f1["flops"], f2["flops"])
+    mem_bytes = extrap(f1["bytes"], f2["bytes"])
+    coll = {k: extrap(f1["coll"].get(k, 0.0), f2["coll"].get(k, 0.0))
+            for k in set(f1["coll"]) | set(f2["coll"])}
+
+    # production artifact: full depth, rolled scans, exact memory analysis
+    full = one_compile(cfg, 1)
+
+    rec = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "status": "ok",
+        "mesh": dict(zip(mesh.axis_names,
+                         [int(s) for s in mesh.devices.shape])),
+        "flops_per_device": flops,
+        "bytes_per_device": mem_bytes,
+        "collective_bytes_per_device": coll,
+        "flops_rolled_module": full["flops"],
+        "memory": full["memory"],
+        "seconds": round(time.monotonic() - t0, 1),
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "cost_extrapolation": {"unit_layers": unit, "n_units": n_units,
+                               "f1": f1["flops"], "f2": f2["flops"]},
+    }
+    gc.collect()
+    return rec
+
+
+def _lower_one(cfg: ModelConfig, shape: ShapeSpec, mesh,
+               step_overrides: dict | None,
+               plan_overrides: dict | None) -> dict:
+    plan = make_plan(mesh, cfg, shape)
+    if plan_overrides:
+        for k, v in plan_overrides.items():
+            object.__setattr__(plan, k, v)
+    step_cfg = StepConfig(**{"remat": True, "microbatches": 1,
+                             **(step_overrides or {})})
+    shard = plan.shard_fn()
+
+    # parameter / state shape trees (eval_shape: zero allocation)
+    rng = jax.random.PRNGKey(0)
+    with mesh:
+        if shape.kind == "train":
+            state_shapes = jax.eval_shape(
+                lambda k: init_train_state(k, cfg, step_cfg), rng)
+            state_sh = plan.params_shardings(state_shapes)
+            batch_specs = input_specs(cfg, shape)
+            batch_sh = {k: _sanitize(mesh, plan.batch_spec(), v.shape)
+                        if v.ndim >= 2 else NamedSharding(mesh, P())
+                        for k, v in batch_specs.items()}
+            step = make_train_step(cfg, OptimizerConfig(), step_cfg, shard)
+            jitted = jax.jit(step,
+                             in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            args = (_with_sharding(state_shapes, state_sh),
+                    {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                             sharding=batch_sh[k])
+                     for k, v in batch_specs.items()})
+        elif shape.kind == "prefill":
+            params_shapes = jax.eval_shape(
+                lambda k: init_train_state(k, cfg, step_cfg).params, rng)
+            params_sh = plan.params_shardings(params_shapes)
+            batch_specs = input_specs(cfg, shape)
+            batch_sh = {k: _sanitize(mesh, plan.batch_spec(), v.shape)
+                        if v.ndim >= 2 else NamedSharding(mesh, P())
+                        for k, v in batch_specs.items()}
+            step = make_prefill_step(cfg, step_cfg, shard)
+            # pin output cache shardings (otherwise XLA replicates the KV
+            # cache across the model axis for non-TP'able kv head counts)
+            out_shapes = jax.eval_shape(
+                step, params_shapes,
+                {k: jax.ShapeDtypeStruct(v.shape, v.dtype)
+                 for k, v in batch_specs.items()})
+            logits_sh = _sanitize(mesh, plan.batch_spec(),
+                                  out_shapes[0].shape)
+            cache_out_sh = _cache_shardings(plan, out_shapes[1])
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(logits_sh, cache_out_sh))
+            args = (_with_sharding(params_shapes, params_sh),
+                    {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                             sharding=batch_sh[k])
+                     for k, v in batch_specs.items()})
+        else:  # decode
+            params_shapes = jax.eval_shape(
+                lambda k: init_train_state(k, cfg, step_cfg).params, rng)
+            params_sh = plan.params_shardings(params_shapes)
+            cache_shapes = jax.eval_shape(
+                lambda: init_caches(cfg, shape.global_batch, shape.seq_len))
+            cache_sh = _cache_shardings(plan, cache_shapes)
+            batch_specs = input_specs(cfg, shape)
+            batch_sh = {k: _sanitize(mesh, plan.batch_spec(), v.shape)
+                        for k, v in batch_specs.items()}
+            step = make_decode_step(cfg, step_cfg, shard)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh,
+                                                 cache_sh),
+                             donate_argnums=(2,))
+            args = (_with_sharding(params_shapes, params_sh),
+                    {k: jax.ShapeDtypeStruct(v.shape, v.dtype,
+                                             sharding=batch_sh[k])
+                     for k, v in batch_specs.items()},
+                    _with_sharding(cache_shapes, cache_sh))
+
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        # collectives exist only in the post-SPMD-partitioning module
+        coll = collective_bytes(compiled.as_text())
+        mem = compiled.memory_analysis()
+        cost = _cost_dict(compiled)
+
+    out = {
+        "flops": cost.get("flops", -1.0),
+        "bytes": cost.get("bytes accessed", -1.0),
+        "coll": coll,
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", -1),
+            "output_bytes": getattr(mem, "output_size_in_bytes", -1),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", -1),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", -1),
+        },
+    }
+    del compiled, lowered, jitted
+    gc.collect()
+    return out
+
+
+def _cache_shardings(plan, cache_shapes):
+    mesh = plan.mesh
+
+    def spec_for(path, leaf):
+        nd = leaf.ndim
+        if nd == 5:
+            # (L,B,S,KV,hd) KV caches are compute-dtype; (L,B,H,P,N) SSM
+            # states accumulate in f32.
+            kind = "ssm_h" if leaf.dtype == jnp.float32 else "kv"
+        elif nd == 4:
+            kind = "ssm_conv"
+        elif nd == 2:
+            kind = "kv_len"
+        elif nd == 3:
+            return NamedSharding(mesh, plan.batch_spec())
+        else:
+            return NamedSharding(mesh, P())
+        spec = plan.cache_spec(kind)
+        if len(spec) > nd:
+            spec = P(*list(spec)[:nd])
+        return _sanitize(mesh, spec, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shapes)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="reports/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch_id in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch_id}__{shape_name}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip cached] {tag}")
+                    continue
+                print(f"[lower] {tag} ...", flush=True)
+                try:
+                    rec = lower_cell(arch_id, shape_name, multi_pod=mp)
+                except Exception as e:
+                    rec = {"arch": arch_id, "shape": shape_name,
+                           "multi_pod": mp, "status": "error",
+                           "error": f"{type(e).__name__}: {e}",
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                print(f"   -> {rec['status']} "
+                      f"({rec.get('seconds', '-')}s)", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

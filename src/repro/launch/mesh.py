@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh()`` is a FUNCTION (importing this module never touches
+jax device state). Single-pod: (data=16, model=16) = 256 chips (one v5e pod).
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis carries
+only data-parallel gradient reduction (DCI-friendly), ``model`` stays inside
+a pod's ICI domain.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh for CPU smoke tests."""
+    dev = jax.devices()
+    n = len(dev)
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline targets; see launch/roofline.py)
+PEAK_BF16_FLOPS = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~4 links usable)

@@ -1,0 +1,217 @@
+"""GQA attention with RoPE, causal masking, KV caching and an optional
+flash-attention Pallas kernel path (repro/kernels/flash_attention)."""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Identity, apply_rope, dense, init_dense
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S, KV, hd) — bf16, or int8 when quantized
+    v: jax.Array          # (B, S, KV, hd)
+    length: jax.Array     # (B,) int32 — valid prefix length
+    k_scale: jax.Array | None = None   # (B, S, KV, 1) f32 when int8
+    v_scale: jax.Array | None = None
+
+
+# Module-level implementation switches (same pattern as
+# transformer.SCAN_UNROLL / moe.MOE_DISPATCH — flipped per-variant by the
+# dry-run and the perf harness, defaults = baseline):
+ATTN_IMPL = "chunked"     # "naive" | "chunked" (flash-style online softmax)
+KV_QUANT = False          # int8 KV cache (capacity optimization)
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype=jnp.float32) -> dict:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(kq, d_model, n_heads * head_dim, dtype),
+        "wk": init_dense(kk, d_model, n_kv_heads * head_dim, dtype),
+        "wv": init_dense(kv, d_model, n_kv_heads * head_dim, dtype),
+        "wo": init_dense(ko, n_heads * head_dim, d_model, dtype),
+    }
+
+
+def _repeat_kv(x: jax.Array, rep: int) -> jax.Array:
+    if rep == 1:
+        return x
+    b, s, kv, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :],
+                            (b, s, kv, rep, hd)).reshape(b, s, kv * rep, hd)
+
+
+def dot_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                  causal: bool, q_offset=None,
+                  kv_length=None) -> jax.Array:
+    """q: (B,Lq,H,hd); k,v: (B,Lk,H,hd). Returns (B,Lq,H,hd)."""
+    b, lq, h, hd = q.shape
+    lk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(lk)
+    neg = jnp.finfo(jnp.float32).min
+    if causal:
+        qpos = jnp.arange(lq)
+        if q_offset is not None:
+            qpos = qpos + q_offset[..., None] if q_offset.ndim else \
+                qpos + q_offset
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None], scores, neg)
+    if kv_length is not None:
+        valid = kpos[None, :] < kv_length[:, None]
+        scores = jnp.where(valid[:, None, None, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def dot_attention_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                          causal: bool, block_k: int = 1024,
+                          kv_length=None) -> jax.Array:
+    """Flash-style online-softmax attention expressed in XLA (scan over KV
+    blocks, f32 running statistics, bf16 score/prob tensors): the (Lq, Lk)
+    f32 score tensor is never materialized — the HBM-traffic reduction the
+    Pallas kernel realizes on TPU, available to the dry-run cost model.
+    Fully-masked causal blocks are skipped via the score mask (XLA DCEs the
+    constant branch under unrolled scans)."""
+    bsz, lq, h, hd = q.shape
+    lk = k.shape[1]
+    block_k = min(block_k, lk)
+    assert lk % block_k == 0
+    nb = lk // block_k
+    scale = 1.0 / math.sqrt(hd)
+    kb = k.reshape(bsz, nb, block_k, h, hd)
+    vb = v.reshape(bsz, nb, block_k, h, hd)
+    qpos = jnp.arange(lq)
+    neg = jnp.float32(-1e30)
+
+    def body(carry, inp):
+        m, s_sum, acc = carry
+        kc, vc, ib = inp
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kc,
+                            preferred_element_type=jnp.float32) * scale
+        kpos = ib * block_k + jnp.arange(block_k)
+        if causal:
+            mask = kpos[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None], scores, neg)
+        if kv_length is not None:
+            valid = kpos[None, :] < kv_length[:, None]
+            scores = jnp.where(valid[:, None, None, :], scores, neg)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None]).astype(q.dtype)
+        s_sum = s_sum * alpha + jnp.sum(p, axis=-1,
+                                        dtype=jnp.float32)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        acc = acc * alpha[..., None] + pv.astype(jnp.float32)
+        return (m_new, s_sum, acc), None
+
+    m0 = jnp.full((bsz, h, lq), -1e30, jnp.float32)
+    s0 = jnp.zeros((bsz, h, lq), jnp.float32)
+    a0 = jnp.zeros((bsz, h, lq, hd), jnp.float32)
+    ks = jnp.moveaxis(kb, 1, 0)
+    vs = jnp.moveaxis(vb, 1, 0)
+    (m, s_sum, acc), _ = jax.lax.scan(
+        body, (m0, s0, a0), (ks, vs, jnp.arange(nb)))
+    out = acc / jnp.maximum(s_sum, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def quantize_kv(x: jax.Array):
+    """Per-(position, head) symmetric int8 KV quantization."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def attention(params: dict, x: jax.Array, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, rope_theta: float, causal: bool = True,
+              positions: jax.Array | None = None,
+              cache: KVCache | None = None,
+              shard=Identity, use_flash: bool = False):
+    """Returns (out, new_cache). Prefill: cache=None, full seq. Decode:
+    x is (B, 1, D) and cache holds past K/V."""
+    b, l, _ = x.shape
+    q = dense(params["wq"], x).reshape(b, l, n_heads, head_dim)
+    k = dense(params["wk"], x).reshape(b, l, n_kv_heads, head_dim)
+    v = dense(params["wv"], x).reshape(b, l, n_kv_heads, head_dim)
+    q = shard("attn_q", q)
+    rep = n_heads // n_kv_heads
+    if cache is None:
+        pos = positions if positions is not None else jnp.arange(l)
+        if rope_theta:
+            q = apply_rope(q, pos, rope_theta)
+            k = apply_rope(k, pos, rope_theta)
+        kf, vf = _repeat_kv(k, rep), _repeat_kv(v, rep)
+        if use_flash and causal and l >= 512:
+            from repro.kernels.flash_attention.ops import flash_attention
+            out = flash_attention(q, kf, vf, causal=True)
+        elif ATTN_IMPL == "chunked" and l >= 2048:
+            out = dot_attention_chunked(q, kf, vf, causal=causal)
+        else:
+            out = dot_attention(q, kf, vf, causal=causal)
+        if KV_QUANT:
+            qk, sk = quantize_kv(k)
+            qv, sv = quantize_kv(v)
+            new_cache = KVCache(k=qk, v=qv,
+                                length=jnp.full((b,), l, jnp.int32),
+                                k_scale=sk, v_scale=sv)
+        else:
+            new_cache = KVCache(k=k, v=v,
+                                length=jnp.full((b,), l, jnp.int32))
+    else:
+        # single-token decode against the cache
+        pos = cache.length                                  # (B,)
+        if rope_theta:
+            q = apply_rope(q, pos[:, None], rope_theta)
+            k = apply_rope(k, pos[:, None], rope_theta)
+        oh = jax.nn.one_hot(cache.length, cache.k.shape[1],
+                            dtype=jnp.float32)              # (B, S)
+        quant = cache.k_scale is not None
+        if quant:
+            qk, sk = quantize_kv(k)
+            qv, sv = quantize_kv(v)
+            ohq = oh[:, :, None, None]
+            k_cache = cache.k + (ohq * qk.astype(jnp.float32)).astype(
+                cache.k.dtype)
+            v_cache = cache.v + (ohq * qv.astype(jnp.float32)).astype(
+                cache.v.dtype)
+            k_scale = cache.k_scale + ohq * sk
+            v_scale = cache.v_scale + ohq * sv
+            kf = _repeat_kv(dequantize_kv(k_cache, k_scale, x.dtype), rep)
+            vf = _repeat_kv(dequantize_kv(v_cache, v_scale, x.dtype), rep)
+            new_cache = KVCache(k=k_cache, v=v_cache,
+                                length=cache.length + 1,
+                                k_scale=k_scale, v_scale=v_scale)
+        else:
+            ohq = oh[:, :, None, None].astype(cache.k.dtype)
+            k_cache = cache.k + ohq * k.astype(cache.k.dtype)
+            v_cache = cache.v + ohq * v.astype(cache.v.dtype)
+            kf = _repeat_kv(k_cache, rep)
+            vf = _repeat_kv(v_cache, rep)
+            new_cache = KVCache(k=k_cache, v=v_cache,
+                                length=cache.length + 1)
+        out = dot_attention(q, kf, vf, causal=False,
+                            kv_length=cache.length + 1)
+    out = shard("attn_out", out)
+    out = out.reshape(b, l, n_heads * head_dim)
+    return dense(params["wo"], out), new_cache
+
+
+def init_kv_cache(batch: int, max_seq: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+        v=jnp.zeros((batch, max_seq, n_kv_heads, head_dim), dtype),
+        length=jnp.zeros((batch,), jnp.int32))

@@ -1,0 +1,43 @@
+"""Gradient compression for the cross-pod hop: int8 quantization with
+error feedback (residual carried across steps). Used when the mesh has a
+``pod`` axis — DCI bandwidth is the scarce resource at 1000+ nodes.
+
+The compression is simulated faithfully in-graph (quantize -> dequantize ->
+all-reduce semantics under shardings); the error-feedback state is part of
+the training state and checkpoints with it.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), keepdims=False)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads_with_feedback(grads, residuals):
+    """Returns (decompressed grads as would arrive post-allreduce,
+    new residuals). Error feedback: residual = g - Q(g + r)."""
+    def one(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_int8(g32)
+        deq = dequantize_int8(q, scale)
+        return deq.astype(g.dtype), (g32 - deq)
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return treedef.unflatten([o[0] for o in out]), \
+        treedef.unflatten([o[1] for o in out])
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

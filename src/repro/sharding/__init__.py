@@ -1,0 +1,1 @@
+from repro.sharding.rules import ShardingPlan, make_plan

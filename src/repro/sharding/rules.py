@@ -1,0 +1,197 @@
+"""Sharding rules: logical-axis -> mesh-axis resolution with divisibility
+fallbacks (the production pattern: Megatron/MaxText-style logical rules, but
+resolved per-architecture at mesh-build time).
+
+Mesh axes:
+  pod    (multi-pod only) — outermost data-parallel hop (DCI links)
+  data   — FSDP: parameters/optimizer sharded, all-gathered per layer;
+           batch (and long-sequence) dimension of activations
+  model  — TP: attention heads / FFN hidden / vocab; EP: MoE experts
+
+Strategy per tensor class (see DESIGN.md §5):
+  * dense kernels (d_in, d_out): P("data", "model") — FSDP x TP
+  * attention projections: TP over heads when divisible, else fully-FSDP
+    (P(("data","model"), None)) with replicated attention compute
+  * MoE experts (E, d, f): EP P("model", "data", None) when E % model == 0,
+    else TP inside experts P(None, "data", "model")
+  * embeddings (V, d): P("model", "data") — vocab-sharded
+  * activations (B, L, D): P(("pod","data"), None, None); batch=1
+    long-context shards the sequence axis instead: P(None, ("pod","data"), None)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    mesh: Mesh
+    cfg: ModelConfig
+    shape: ShapeSpec
+    data_axes: tuple[str, ...]      # ("pod","data") or ("data",)
+    model_axis: str
+    shard_seq: bool                 # batch too small -> shard sequence
+    attn_tp: bool                   # heads divisible by model axis
+    kv_tp: bool                     # kv heads divisible
+    moe_ep: bool
+
+    # ---- parameter specs ---------------------------------------------------
+    def param_spec(self, path: tuple[str, ...], leaf: Any) -> P:
+        """Spec for one parameter leaf. Layer-stacked subtrees (scan-over-
+        layers: 'blocks', 'enc_blocks', 'tail') carry a leading layer axis
+        that is never sharded — the logical rule applies to the remaining
+        dims."""
+        name = "/".join(str(p) for p in path)
+        nd = leaf.ndim if hasattr(leaf, "ndim") else 0
+        model = self.model_axis
+        data = "data"
+        stacked = any(seg in name for seg in ("blocks", "tail/"))
+        if "tail" in name.split("/"):
+            stacked = True
+        if "shared_attn" in name:
+            stacked = False
+        end = nd - (1 if stacked else 0)   # effective (logical) rank
+
+        def wrap(*spec_dims):
+            return P(None, *spec_dims) if stacked else P(*spec_dims)
+
+        if end <= 1:
+            return P()
+        # embeddings
+        if "embed" in name and "table" in name:
+            return P(model, data)
+        # MoE expert banks (E, d_in, d_out)
+        if ("experts" in name or "shared/" in name or
+                name.endswith("shared")) and end == 3:
+            if self.moe_ep and "experts" in name:
+                return wrap(model, data, None)
+            return wrap(None, data, model)
+        if "router" in name:
+            return wrap(data, None)
+        # attention projections
+        if any(k in name for k in ("wq", "wk", "wv")):
+            tp_ok = self.attn_tp if "wq" in name else self.kv_tp
+            return wrap(data, model) if tp_ok else wrap((data, model), None)
+        if "wo" in name:
+            return wrap(model, data) if self.attn_tp \
+                else wrap((data, model), None)
+        # MLP
+        if any(k in name for k in ("up", "gate")) and end == 2:
+            return wrap(data, model) if self._ff_tp() \
+                else wrap((data, model), None)
+        if "down" in name and end == 2:
+            return wrap(model, data) if self._ff_tp() \
+                else wrap((data, model), None)
+        # SSM projections
+        if "in_proj" in name:
+            return wrap(data, None)     # split boundaries misalign with TP
+        if "out_proj" in name:
+            return wrap(model, data) if self._ssm_tp() \
+                else wrap((data, model), None)
+        if "conv_w" in name:
+            return wrap(None, None)
+        if end == 2:
+            return wrap(data, None)
+        return P()
+
+    def _ff_tp(self) -> bool:
+        ms = self.mesh.shape[self.model_axis]
+        ff = self.cfg.moe_d_ff or self.cfg.d_ff
+        return ff % ms == 0 if ff else False
+
+    def _ssm_tp(self) -> bool:
+        # shard the SSD head dimension (d_inner) across model axis
+        ms = self.mesh.shape[self.model_axis]
+        d_inner = self.cfg.ssm_expand * self.cfg.d_model
+        n_heads = d_inner // max(self.cfg.ssm_head_dim, 1)
+        return n_heads % ms == 0 if n_heads else False
+
+    def params_shardings(self, params_shape) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda path, leaf: NamedSharding(
+                self.mesh, self.param_spec(
+                    tuple(getattr(p, "key", getattr(p, "idx", p))
+                          for p in path), leaf)),
+            params_shape)
+
+    # ---- activation / batch specs ------------------------------------------
+    def batch_spec(self) -> P:
+        if self.shard_seq:
+            return P(None, self.data_axes)
+        return P(self.data_axes, None)
+
+    def act_spec(self, logical: str) -> P:
+        data = self.data_axes
+        model = self.model_axis
+        batch = None if self.shard_seq else data
+        seq = data if self.shard_seq else None
+        return {
+            "hidden": P(batch, seq, None),
+            "logits": P(batch, seq, model),
+            "ffn_hidden": P(batch, seq, model) if self._ff_tp()
+            else P(batch, seq, None),
+            "attn_q": P(batch, seq, model if self.attn_tp else None, None),
+            "attn_out": P(batch, seq, model if self.attn_tp else None, None),
+            "moe_expert_in": P(model if self.moe_ep else None, None, None),
+            "moe_expert_out": P(model if self.moe_ep else None, None, None),
+            "ssm_x": P(batch, seq, model if self._ssm_tp() else None, None),
+        }.get(logical, P())
+
+    def shard_fn(self):
+        def fn(logical: str, x):
+            try:
+                spec = self.act_spec(logical)
+                return jax.lax.with_sharding_constraint(
+                    x, NamedSharding(self.mesh, spec))
+            except (ValueError, KeyError):
+                return x
+        return fn
+
+    # ---- KV cache / SSM state specs -----------------------------------------
+    def cache_spec(self, kind: str) -> P:
+        data = self.data_axes
+        model = self.model_axis
+        batch = None if self.shard_seq else data
+        seq = data if self.shard_seq else None
+        if kind == "kv":           # (layers, B, S, KV, hd)
+            if self.kv_tp:
+                return P(None, batch, seq, model, None)
+            # kv heads not divisible: shard the cache's sequence axis on the
+            # model axis instead of replicating 16x (HBM capacity!)
+            if seq is None:
+                return P(None, batch, model, None, None)
+            return P(None, batch, seq, None, None)
+        if kind == "kv_len":       # (layers, B)
+            return P(None, batch)
+        if kind == "ssm_h":        # (layers, B, H, P, N)
+            return P(None, batch, model if self._ssm_tp() else None,
+                     None, None)
+        if kind == "ssm_conv":     # (layers, B, K-1, conv_dim)
+            return P(None, batch, None, model if self._ssm_tp() else None)
+        return P()
+
+
+def make_plan(mesh: Mesh, cfg: ModelConfig, shape: ShapeSpec) -> ShardingPlan:
+    axes = mesh.axis_names
+    model_axis = "model"
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    ms = mesh.shape[model_axis]
+    total_data = int(np.prod([mesh.shape[a] for a in data_axes]))
+    shard_seq = shape.global_batch < total_data
+    attn_tp = cfg.n_heads % ms == 0 if cfg.n_heads else False
+    kv_tp = cfg.n_kv_heads % ms == 0 if cfg.n_kv_heads else False
+    moe_ep = (cfg.moe_sharding == "ep" or
+              (cfg.moe_sharding == "auto" and cfg.n_experts % ms == 0)) \
+        and cfg.n_experts > 0 and cfg.n_experts % ms == 0
+    return ShardingPlan(mesh=mesh, cfg=cfg, shape=shape,
+                        data_axes=data_axes, model_axis=model_axis,
+                        shard_seq=shard_seq, attn_tp=attn_tp, kv_tp=kv_tp,
+                        moe_ep=moe_ep)

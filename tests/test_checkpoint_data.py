@@ -1,0 +1,75 @@
+"""Checkpoint atomicity/retention/restore + data-pipeline determinism."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              save_checkpoint)
+from repro.checkpoint.checkpoint import latest_step
+from repro.data.pipeline import DataConfig, SyntheticLMData
+
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((2,), jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 5, t, {"cursor": 5})
+    like = jax.tree.map(jnp.zeros_like, t)
+    restored, step, extra = load_checkpoint(str(tmp_path), like)
+    assert step == 5 and extra == {"cursor": 5}
+    for x, y in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_retention_and_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(str(tmp_path), s, t, keep=2)
+    steps = sorted(os.listdir(str(tmp_path)))
+    assert steps == ["step_00000004", "step_00000005"]
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    assert not [d for d in os.listdir(str(tmp_path))
+                if d.startswith("tmp.")]
+
+
+def test_manager_restore_or_init(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=2)
+    t = _tree()
+    assert mgr.maybe_save(1, t) is None
+    assert mgr.maybe_save(2, t) is not None
+    restored, step, _ = mgr.restore_or_init(jax.tree.map(jnp.zeros_like, t))
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(t["a"]))
+
+
+def test_data_determinism_and_restart():
+    cfg = DataConfig(vocab_size=977, seq_len=32, global_batch=8, seed=3)
+    d1 = SyntheticLMData(cfg)
+    d2 = SyntheticLMData(cfg)
+    b1, b2 = d1.batch(17), d2.batch(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    # different steps differ
+    assert not np.array_equal(d1.batch(18)["tokens"], b1["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b1["tokens"][:, 1:], b1["labels"][:, :-1])
+
+
+def test_data_host_sharding():
+    cfg = DataConfig(vocab_size=977, seq_len=16, global_batch=8, seed=0)
+    hosts = [SyntheticLMData(cfg, host_id=h, n_hosts=4) for h in range(4)]
+    batches = [h.batch(3)["tokens"] for h in hosts]
+    assert all(b.shape == (2, 16) for b in batches)
+    # shards differ across hosts (independent slices)
+    assert not np.array_equal(batches[0], batches[1])

@@ -1,0 +1,34 @@
+"""Integration: the multi-pod dry-run machinery end-to-end for one cell
+(subprocess — the 512-device XLA flag must precede jax init)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("mesh", ["single", "multi"])
+def test_dryrun_one_cell(tmp_path, mesh):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "glm4-9b", "--shape", "decode_32k",
+         "--mesh", mesh, "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stdout[-2000:] + out.stderr[-2000:]
+    tag = f"glm4-9b__decode_32k__{mesh}.json"
+    rec = json.load(open(tmp_path / tag))
+    assert rec["status"] == "ok", rec
+    assert rec["flops_per_device"] > 0
+    assert rec["memory"]["argument_bytes"] > 0
+    # roofline terms derivable
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.launch.roofline import roofline_terms
+    t = roofline_terms(rec)
+    assert t["status"] == "ok"
+    assert t["dominant"] in ("compute", "memory", "collective")

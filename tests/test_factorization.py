@@ -1,0 +1,60 @@
+"""Property tests for Flexible Factorization (paper Alg. 1)."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.factorization import (flex_score, flexible_factorization,
+                                      prime_factors, sub_multiset_products)
+
+
+@given(st.integers(2, 100_000))
+@settings(max_examples=200, deadline=None)
+def test_prime_factors_product(n):
+    fs = prime_factors(n)
+    assert math.prod(fs) == n
+    assert all(p >= 2 for p in fs)
+
+
+@given(st.integers(2, 50_000), st.floats(0.0, 1.0), st.integers(1, 6))
+@settings(max_examples=100, deadline=None)
+def test_flexfact_invariants(n, alpha, k_min):
+    f = flexible_factorization(n, alpha, k_min)
+    assert math.prod(f) == n
+    assert len(f) >= min(k_min, len(prime_factors(n)))
+    # merging can only reduce factor count vs the prime pool
+    assert len(f) <= len(prime_factors(n))
+
+
+def test_flexfact_trivial():
+    assert flexible_factorization(1) == []
+    assert flexible_factorization(7) == [7]
+    assert flexible_factorization(8, k_min=3) == [2, 2, 2]
+
+
+def test_merging_reduces_flex_score():
+    # FlexScore must not increase when factors merge (fewer partitions)
+    full = (2, 2, 2, 2, 2)
+    merged = (4, 2, 2, 2)
+    assert flex_score(merged) <= flex_score(full)
+
+
+@given(st.lists(st.sampled_from([2, 3, 4, 5, 7, 8]), min_size=0,
+                max_size=6))
+@settings(max_examples=100, deadline=None)
+def test_sub_multiset_products(factors):
+    prods = sub_multiset_products(factors)
+    assert 1 in prods
+    assert math.prod(factors) in prods
+    total = math.prod(factors)
+    for p in prods:
+        assert total % p == 0
+
+
+def test_flexscore_large_bound_fast():
+    """32768 = 2^15 — the partition count must come from the memoized DP,
+    not 3^15 enumeration (paper's motivation: search-space control)."""
+    f = flexible_factorization(32768, alpha=0.15, k_min=3)
+    assert math.prod(f) == 32768
+    assert len(f) <= 6

@@ -1,0 +1,155 @@
+"""Per-kernel correctness: shape/dtype sweeps, Pallas interpret=True vs the
+pure-jnp ref oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul_int8.kernel import matmul_int8
+from repro.kernels.matmul_int8.ops import quantized_matmul
+from repro.kernels.matmul_int8.ref import matmul_int8_ref, quantize_rowwise
+from repro.kernels.ssd_scan.ops import ssd_intra_chunk
+from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
+
+
+# ---------------------------------------------------------------------------
+# matmul_int8
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(32, 64, 32), (64, 128, 64),
+                                   (128, 256, 128), (32, 512, 16)])
+@pytest.mark.parametrize("bm,bk,bn", [(16, 32, 16), (32, 64, 32)])
+def test_matmul_int8_shapes(m, k, n, bm, bk, bn):
+    if m % bm or k % bk or n % bn:
+        pytest.skip("non-divisible")
+    rng = np.random.default_rng(0)
+    x_q = rng.integers(-127, 128, (m, k)).astype(np.int8)
+    w_q = rng.integers(-127, 128, (k, n)).astype(np.int8)
+    sx = rng.uniform(0.01, 0.1, (m,)).astype(np.float32)
+    sw = rng.uniform(0.01, 0.1, (n,)).astype(np.float32)
+    out = matmul_int8(jnp.asarray(x_q), jnp.asarray(w_q), jnp.asarray(sx),
+                      jnp.asarray(sw), bm=bm, bk=bk, bn=bn,
+                      out_dtype=jnp.float32, interpret=True)
+    ref = matmul_int8_ref(x_q, w_q, sx, sw, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quantized_matmul_close_to_fp(dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((64, 128)), dtype)
+    w = jnp.asarray(rng.standard_normal((128, 96)) * 0.1, dtype)
+    out = quantized_matmul(x, w, use_kernel=True, interpret=True,
+                           out_dtype=jnp.float32)
+    exact = (x.astype(jnp.float32) @ w.astype(jnp.float32))
+    # int8 quantization error bound (~1%)
+    rel = np.linalg.norm(np.asarray(out) - np.asarray(exact)) / \
+        np.linalg.norm(np.asarray(exact))
+    assert rel < 0.03, rel
+
+
+def test_quantize_roundtrip():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
+    q, s = quantize_rowwise(x, axis=1)
+    back = q.astype(jnp.float32) * s[:, None]
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x),
+                               atol=float(jnp.max(jnp.abs(x))) / 100)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("l,hd,bq,bk", [(128, 64, 32, 32), (256, 64, 64, 64),
+                                        (128, 128, 64, 32)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(l, hd, bq, bk, causal):
+    rng = np.random.default_rng(3)
+    b, h = 2, 2
+    q = jnp.asarray(rng.standard_normal((b, l, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, l, h, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, l, h, hd)), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    rng = np.random.default_rng(4)
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), dtype)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), dtype)
+    v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd intra-chunk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,h,n,p", [(32, 2, 16, 16), (64, 4, 32, 32),
+                                     (128, 2, 64, 64)])
+def test_ssd_intra_chunk_vs_ref(q, h, n, p):
+    rng = np.random.default_rng(5)
+    b, nc = 2, 2
+    c = jnp.asarray(rng.standard_normal((b, nc, q, h, n)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, nc, q, h, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, nc, q, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    s = jnp.cumsum(dt * a, axis=2)
+    x = jnp.asarray(rng.standard_normal((b, nc, q, h, p)), jnp.float32)
+    out = ssd_intra_chunk(c, bb, s, dt, x, interpret=True)
+    ref = ssd_intra_chunk_ref(c, bb, s, dt, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_chunked_matches_sequential():
+    """End-to-end SSD (chunked algorithm incl. inter-chunk recurrence) vs
+    the step-by-step recurrence oracle."""
+    from repro.kernels.ssd_scan.ref import ssd_sequential_ref
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(6)
+    b, l, h, p, g, n = 2, 64, 4, 16, 1, 16
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.2, (b, l, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((h,)), jnp.float32)
+    y, hf = ssd_chunked(x, dt, a, bm, cm, d, chunk=16)
+    y_ref, h_ref = ssd_sequential_ref(x, dt, a, bm, cm, d)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h_ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_kernel_path_in_chunked():
+    from repro.models.ssm import ssd_chunked
+    rng = np.random.default_rng(7)
+    b, l, h, p, g, n = 1, 64, 2, 16, 1, 16
+    x = jnp.asarray(rng.standard_normal((b, l, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.2, (b, l, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, l, g, n)), jnp.float32)
+    d = jnp.asarray(rng.standard_normal((h,)), jnp.float32)
+    y0, _ = ssd_chunked(x, dt, a, bm, cm, d, chunk=32, use_kernel=False)
+    y1, _ = ssd_chunked(x, dt, a, bm, cm, d, chunk=32, use_kernel=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-3, atol=2e-3)

@@ -1,0 +1,93 @@
+"""Analytical latency model: structural properties + simulator agreement
+(the paper's Fig. 4(a) discipline as a test)."""
+
+import math
+import random
+
+import pytest
+
+from repro.core.arch import INPUT, OUTPUT, WEIGHT, default_arch
+from repro.core.baselines import _sample_mapping, greedy_mapping
+from repro.core.energy import evaluate_edp
+from repro.core.factorization import factorize_layer_dims
+from repro.core.latency import evaluate, idealized_cycles
+from repro.core.mapping import validate
+from repro.core.simulator import simulate
+from repro.core.workload import DIMS, conv, gemm, resnet18
+
+ARCH = default_arch()
+
+
+@pytest.mark.parametrize("layer", resnet18(), ids=lambda l: l.name)
+def test_greedy_always_feasible(layer):
+    mp = greedy_mapping(layer, ARCH)
+    assert validate(mp, layer, ARCH) == []
+    rep = evaluate(mp, layer, ARCH)
+    assert rep.total_cycles > 0
+    assert 0 < rep.spatial_util <= 1
+    assert 0 < rep.temporal_util <= 1
+
+
+def test_latency_lower_bound():
+    """Total latency >= serial MVM count * L_MVM (compute bound)."""
+    layer = gemm("g", 64, 128, 256)
+    mp = greedy_mapping(layer, ARCH)
+    rep = evaluate(mp, layer, ARCH)
+    iters = math.prod(f for _, f in mp.temporal)
+    assert rep.total_cycles >= iters * ARCH.l_mvm_cycles
+
+
+def test_idealized_is_optimistic():
+    """The perfect-overlap model (paper limitation ❶) never exceeds the
+    accurate model."""
+    rng = random.Random(0)
+    layer = conv("c", 1, 64, 64, 14, 14, 3, 3)
+    factors = factorize_layer_dims({d: layer.bound(d) for d in DIMS})
+    checked = 0
+    while checked < 10:
+        mp = _sample_mapping(layer, ARCH, rng, factors)
+        if mp is None:
+            continue
+        checked += 1
+        assert idealized_cycles(mp, layer, ARCH) <= \
+            evaluate(mp, layer, ARCH).total_cycles + 1e-6
+
+
+def test_simulator_agreement():
+    """Mean analytical-model accuracy vs the event simulator (paper: 95.5%;
+    we gate at a conservative 80% for small random mapping samples)."""
+    rng = random.Random(1)
+    layer = conv("c", 1, 64, 64, 14, 14, 3, 3)
+    factors = factorize_layer_dims({d: layer.bound(d) for d in DIMS})
+    accs = []
+    while len(accs) < 8:
+        mp = _sample_mapping(layer, ARCH, rng, factors)
+        if mp is None:
+            continue
+        iters = math.prod(f for _, f in mp.temporal)
+        if iters > 60_000:
+            continue
+        model = evaluate(mp, layer, ARCH).total_cycles
+        sim = simulate(mp, layer, ARCH).total_cycles
+        accs.append(1 - abs(model - sim) / max(sim, 1))
+    assert sum(accs) / len(accs) > 0.8, accs
+
+
+def test_mode_switch_costs_show_up():
+    """Weight reloads into the macro must cost more than the raw transfer
+    (Fig. 2(a) mode-switch stalls)."""
+    layer = gemm("g", 32, 64, 128)
+    mp = greedy_mapping(layer, ARCH)
+    import dataclasses
+    base = evaluate(mp, layer, ARCH).total_cycles
+    quiet = dataclasses.replace(ARCH, mode_switch_cycles=0)
+    assert evaluate(mp, layer, quiet).total_cycles <= base
+
+
+def test_energy_positive_and_layered():
+    layer = conv("c", 1, 64, 64, 14, 14, 3, 3)
+    mp = greedy_mapping(layer, ARCH)
+    edp = evaluate_edp(mp, layer, ARCH)
+    assert edp.energy.total_pj > 0
+    assert edp.energy.mac_pj == layer.macs * ARCH.mac_energy_pj
+    assert edp.edp > 0

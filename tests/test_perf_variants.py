@@ -1,0 +1,92 @@
+"""Optimization variants must be numerically equivalent to their baselines
+(the §Perf discipline: keep the speedup, prove correctness)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attn_mod
+import repro.models.moe as moe_mod
+from repro.models.attention import (dot_attention, dot_attention_chunked,
+                                    dequantize_kv, quantize_kv)
+from repro.models.moe import init_moe, moe
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("lq,lk,bk", [(4096, 4096, 1024),
+                                      (2048, 2048, 512)])
+def test_chunked_attention_matches_naive(causal, lq, lk, bk):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((1, lq, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, lk, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, lk, 2, 32)), jnp.float32)
+    ref = dot_attention(q, k, v, causal=causal)
+    out = dot_attention_chunked(q, k, v, causal=causal, block_k=bk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_kv_quantization_roundtrip():
+    rng = np.random.default_rng(1)
+    k = jnp.asarray(rng.standard_normal((2, 8, 4, 64)), jnp.float32)
+    q, s = quantize_kv(k)
+    back = dequantize_kv(q, s, jnp.float32)
+    err = np.max(np.abs(np.asarray(back) - np.asarray(k)))
+    assert err < float(jnp.max(jnp.abs(k))) / 50
+
+
+def test_scatter_moe_matches_einsum():
+    """With generous capacity (no drops) the two dispatch implementations
+    are numerically identical."""
+    d, ff, e, k = 32, 64, 8, 2
+    params = init_moe(jax.random.PRNGKey(0), d, ff, e, 0, True)
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((2, 16, d)),
+                    jnp.float32)
+    old = moe_mod.MOE_DISPATCH
+    try:
+        moe_mod.MOE_DISPATCH = "einsum"
+        out_e, aux_e = moe(params, x, n_experts=e, top_k=k, gated=True,
+                           capacity_factor=8.0)
+        moe_mod.MOE_DISPATCH = "scatter"
+        out_s, aux_s = moe(params, x, n_experts=e, top_k=k, gated=True,
+                           capacity_factor=8.0)
+    finally:
+        moe_mod.MOE_DISPATCH = old
+    np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_s),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(aux_e), float(aux_s), rtol=1e-5)
+
+
+def test_decode_with_quantized_cache():
+    """int8 KV decode stays close to the bf16 path on a reduced model."""
+    from repro.configs import get_config
+    from repro.train.steps import (StepConfig, init_train_state,
+                                   make_decode_step, make_prefill_step)
+    cfg = get_config("glm4-9b").reduced()
+    step_cfg = StepConfig(remat=False, compute_dtype=jnp.float32)
+    state = init_train_state(jax.random.PRNGKey(3), cfg, step_cfg)
+    toks = jnp.asarray(np.random.default_rng(4).integers(
+        0, cfg.vocab_size, (2, 8)), jnp.int32)
+    prefill = make_prefill_step(cfg, step_cfg)
+    decode = make_decode_step(cfg, step_cfg)
+    old = attn_mod.KV_QUANT
+    try:
+        attn_mod.KV_QUANT = False
+        logits, caches = jax.jit(prefill)(state.params, {"tokens": toks})
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        pad = lambda t: jnp.pad(
+            t, [(0, 0), (0, 0), (0, 8), (0, 0), (0, 0)]) \
+            if t.ndim == 5 and t.shape[2] == 8 else t
+        caches = jax.tree.map(pad, caches)
+        ref, _ = jax.jit(decode)(state.params, {"tokens": nxt}, caches)
+
+        attn_mod.KV_QUANT = True
+        logits_q, caches_q = jax.jit(prefill)(state.params,
+                                              {"tokens": toks})
+        caches_q = jax.tree.map(pad, caches_q)
+        out_q, _ = jax.jit(decode)(state.params, {"tokens": nxt}, caches_q)
+    finally:
+        attn_mod.KV_QUANT = old
+    # same argmax and close logits
+    assert jnp.argmax(ref, -1).tolist() == jnp.argmax(out_q, -1).tolist()

@@ -1,0 +1,76 @@
+"""Sharding-rule divisibility: every parameter spec must evenly divide its
+tensor on the production mesh shapes, for every assigned architecture —
+checked abstractly via eval_shape (no allocation), both mesh variants."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.sharding.rules import make_plan
+from repro.train.steps import StepConfig, init_train_state
+
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multi": {"pod": 2, "data": 16, "model": 16},
+}
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only read .axis_names / .shape."""
+    def __init__(self, shape: dict):
+        self.axis_names = tuple(shape)
+        self.shape = dict(shape)
+        self.devices = np.empty(tuple(shape.values()), dtype=object)
+
+
+def _check(cfg, plan):
+    shapes = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, StepConfig()),
+        jax.random.PRNGKey(0))
+
+    bad = []
+
+    def check(path, leaf):
+        spec = plan.param_spec(
+            tuple(str(getattr(p, "key", getattr(p, "idx", p)))
+                  for p in path), leaf)
+        for dim, entry in zip(leaf.shape, list(spec)):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            n = 1
+            for a in axes:
+                n *= plan.mesh.shape[a]
+            if dim % n:
+                bad.append(("/".join(str(p) for p in path), leaf.shape,
+                            spec))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(check, shapes)
+    return bad
+
+
+@pytest.mark.parametrize("mesh_name", list(MESH_SHAPES))
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_param_specs_divide(arch_id, mesh_name):
+    cfg = get_config(arch_id)
+    mesh = FakeMesh(MESH_SHAPES[mesh_name])
+    plan = make_plan(mesh, cfg, SHAPES["train_4k"])
+    bad = _check(cfg, plan)
+    assert not bad, bad[:5]
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_plan_flags_sensible(arch_id):
+    cfg = get_config(arch_id)
+    mesh = FakeMesh(MESH_SHAPES["single"])
+    plan = make_plan(mesh, cfg, SHAPES["train_4k"])
+    if cfg.n_heads:
+        assert plan.attn_tp == (cfg.n_heads % 16 == 0)
+    if cfg.n_experts:
+        assert plan.moe_ep == (cfg.moe_sharding != "tp"
+                               and cfg.n_experts % 16 == 0)
+    # batch=1 long-context must flip to sequence sharding
+    plan_long = make_plan(mesh, cfg, SHAPES["long_500k"])
+    assert plan_long.shard_seq

@@ -1,0 +1,41 @@
+"""MIREDO TPU bridge: MIP-selected Pallas blocks respect VMEM (eq. 9 with
+double-buffering), MXU alignment, and beat naive choices on HBM traffic."""
+
+import pytest
+
+from repro.core.tpu_bridge import (LANE, SUBLANE, VMEM_BYTES,
+                                   select_flash_blocks,
+                                   select_matmul_blocks)
+
+
+def traffic(m, k, n, bm, bn):
+    return m * k * (n / bn) + k * n * (m / bm) + 4 * m * n
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (65536, 2304, 360),        # minicpm ffn shard
+    (65536, 6144, 1024),       # internlm2 ffn shard
+    (4096, 4096, 4096),
+])
+def test_matmul_blocks_valid(m, k, n):
+    c = select_matmul_blocks(m, k, n)
+    assert m % c.bm == 0 and k % c.bk == 0 and n % c.bn == 0
+    assert c.bk % LANE == 0 or c.bk == k
+    assert c.bm % SUBLANE == 0 or c.bm == m
+    mult = 2 if c.double_buffered else 1
+    assert mult * c.vmem_bytes <= VMEM_BYTES, (c,)
+
+
+def test_blocks_beat_smallest():
+    """The MIP pick must not be worse than the minimal 128-cube on the
+    modeled HBM traffic."""
+    m, k, n = 65536, 6144, 1024
+    c = select_matmul_blocks(m, k, n)
+    assert traffic(m, k, n, c.bm, c.bn) <= traffic(m, k, n, 128, 128) + 1
+
+
+def test_flash_blocks_fit():
+    bq, bk = select_flash_blocks(32768, 32768, 128)
+    assert 32768 % bq == 0 and 32768 % bk == 0
+    ws = (bq * 128 + 2 * bk * 128) * 2 + bq * 128 * 4 + bq * bk * 4
+    assert 2 * ws <= VMEM_BYTES

@@ -1,0 +1,58 @@
+"""Integration: short real training runs through the full driver stack —
+loss decreases, checkpoint restart resumes identically."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticLMData
+from repro.train.optimizer import OptimizerConfig
+from repro.train.steps import StepConfig, init_train_state, make_train_step
+
+
+def _run(steps, state=None, seed=0, micro=1):
+    cfg = get_config("minicpm-2b").reduced()
+    step_cfg = StepConfig(remat=False, microbatches=micro,
+                          compute_dtype=jnp.float32)
+    opt = OptimizerConfig(lr=5e-3, warmup_steps=5, total_steps=120,
+                          schedule="wsd")
+    if state is None:
+        state = init_train_state(jax.random.PRNGKey(seed), cfg, step_cfg)
+    step = jax.jit(make_train_step(cfg, opt, step_cfg))
+    data = SyntheticLMData(DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                                      global_batch=8, seed=1))
+    losses = []
+    for s in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    return losses, state
+
+
+def test_loss_decreases():
+    losses, _ = _run(60)
+    assert np.mean(losses[-10:]) < 0.75 * np.mean(losses[:5]), (
+        losses[:5], losses[-10:])
+
+
+def test_microbatching_matches_flat():
+    """grad accumulation over 2 microbatches ~= flat batch step (same data,
+    same update up to numerics)."""
+    l1, _ = _run(3, micro=1)
+    l2, _ = _run(3, micro=2)
+    np.testing.assert_allclose(l1, l2, rtol=2e-2)
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    from repro.checkpoint import load_checkpoint, save_checkpoint
+    losses_a, state = _run(5)
+    save_checkpoint(str(tmp_path), 5, state)
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), state)
+    restored, step, _ = load_checkpoint(str(tmp_path), like)
+    assert step == 5
+    cont_from_restore, _ = _run(3, state=jax.tree.map(
+        lambda a: a, restored))
+    cont_direct, _ = _run(3, state=state)
+    np.testing.assert_allclose(cont_from_restore, cont_direct, rtol=1e-5)
