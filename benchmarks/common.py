@@ -1,110 +1,23 @@
-"""Shared benchmark utilities: mapping (de)serialization, per-layer result
-caching (MIP solves are expensive — reruns are incremental), table output."""
+"""Shared benchmark utilities: table/report output plus thin back-compat
+shims over the library-level cache (``repro.core.cache``) and network
+pipeline (``repro.core.network``).
+
+The mapping (de)serialization and the per-layer solve cache used to live
+here; they are now library code so examples, tests and the network pipeline
+share one cache with one key schema (the old key silently ignored most
+``FormulationConfig`` fields — see cache.CACHE_VERSION)."""
 
 from __future__ import annotations
 
-import dataclasses
-import hashlib
 import json
 import os
-import time
 
-from repro.core import workload as wl
-from repro.core.arch import CimArch, OPERANDS, default_arch
-from repro.core.baselines import greedy_mapping, heuristic_search
-from repro.core.energy import evaluate_edp
-from repro.core.formulation import FormulationConfig, optimize_layer
-from repro.core.latency import evaluate
-from repro.core.mapping import Mapping
+from repro.core.cache import (  # noqa: F401  (re-exported API)
+    ResultCache, default_cache_dir, mapping_from_json, mapping_to_json,
+    solve_cached)
 
-CACHE_DIR = os.environ.get("MIREDO_CACHE", "reports/cache")
+CACHE_DIR = default_cache_dir()
 REPORT_DIR = os.environ.get("MIREDO_REPORTS", "reports/benchmarks")
-
-
-def mapping_to_json(m: Mapping) -> dict:
-    return {
-        "spatial": {k: list(map(list, v)) for k, v in m.spatial.items()},
-        "temporal": list(map(list, m.temporal)),
-        "level_of": {k: list(v) for k, v in m.level_of.items()},
-        "double_buf": sorted(map(list, m.double_buf)),
-    }
-
-
-def mapping_from_json(d: dict) -> Mapping:
-    return Mapping(
-        spatial={k: tuple(tuple(x) for x in v)
-                 for k, v in d["spatial"].items()},
-        temporal=tuple(tuple(x) for x in d["temporal"]),
-        level_of={k: tuple(v) for k, v in d["level_of"].items()},
-        double_buf=frozenset((a, b) for a, b in d["double_buf"]))
-
-
-def _arch_key(arch: CimArch) -> str:
-    parts = [arch.name]
-    for lv in arch.levels:
-        parts.append(f"{lv.name}:{lv.capacity_bytes}:{lv.bus_bits}")
-    for ax in arch.spatial:
-        parts.append(f"{ax.name}:{ax.size}")
-    parts.append(f"{arch.l_mvm_cycles}:{arch.mode_switch_cycles}")
-    return hashlib.sha1("|".join(parts).encode()).hexdigest()[:12]
-
-
-def _layer_key(layer: wl.Layer) -> str:
-    dims = ",".join(f"{d}={layer.bound(d)}" for d in wl.DIMS)
-    return hashlib.sha1(f"{dims}|s{layer.stride}".encode()).hexdigest()[:12]
-
-
-def solve_cached(layer: wl.Layer, arch: CimArch, mode: str,
-                 cfg: FormulationConfig | None = None,
-                 budget_s: float = 60.0) -> dict:
-    """mode: 'miredo' | 'ws' | 'heuristic' | 'greedy' | 'random'.
-    Returns {mapping, cycles, edp, energy_pj, solve_s, status}."""
-    cfg = cfg or FormulationConfig(time_limit_s=budget_s)
-    os.makedirs(CACHE_DIR, exist_ok=True)
-    key = f"{mode}__{_layer_key(layer)}__{_arch_key(arch)}" \
-          f"__t{int(cfg.time_limit_s)}_a{cfg.alpha}_k{cfg.k_min}"
-    path = os.path.join(CACHE_DIR, key + ".json")
-    if os.path.exists(path):
-        with open(path) as f:
-            rec = json.load(f)
-        return rec
-    t0 = time.monotonic()
-    if mode == "miredo":
-        res = optimize_layer(layer, arch, cfg)
-        mapping, status = res.mapping, res.status.name
-    elif mode == "ws":
-        c = dataclasses.replace(cfg, weight_stationary=True)
-        res = optimize_layer(layer, arch, c)
-        mapping, status = res.mapping, res.status.name
-    elif mode == "heuristic":
-        r = heuristic_search(layer, arch, budget=2000, seed=0,
-                             accurate=False, k_min=cfg.k_min,
-                             alpha=cfg.alpha)
-        mapping, status = r.mapping, "HEURISTIC"
-    elif mode == "random":
-        r = heuristic_search(layer, arch, budget=2000, seed=0,
-                             accurate=True, k_min=cfg.k_min, alpha=cfg.alpha)
-        mapping, status = r.mapping, "RANDOM"
-    elif mode == "greedy":
-        mapping, status = greedy_mapping(layer, arch), "GREEDY"
-    else:
-        raise ValueError(mode)
-    edp = evaluate_edp(mapping, layer, arch)
-    rec = {
-        "mode": mode,
-        "layer": layer.name,
-        "mapping": mapping_to_json(mapping),
-        "cycles": edp.latency.total_cycles,
-        "energy_pj": edp.energy.total_pj,
-        "edp": edp.edp,
-        "spatial_util": edp.latency.spatial_util,
-        "temporal_util": edp.latency.temporal_util,
-        "solve_s": round(time.monotonic() - t0, 1),
-        "status": status,
-    }
-    with open(path, "w") as f:
-        json.dump(rec, f)
-    return rec
 
 
 def write_report(name: str, payload) -> str:

@@ -1,23 +1,26 @@
 """Fig. 4(c): per-layer latency of MIREDO vs the ZigZag-style heuristic vs
-the constrained weight-stationary dataflow, on ResNet-18."""
+the constrained weight-stationary dataflow, on ResNet-18 — through the
+network pipeline (one parallel budgeted pass per mode, block-repeat
+multiplicity handled by ``counts``)."""
 
 from __future__ import annotations
 
-from benchmarks.common import md_table, solve_cached, write_report
+from benchmarks.common import md_table, write_report
 from repro.core.arch import default_arch
+from repro.core.network import optimize_network
 from repro.core.workload import RESNET18_MULTIPLICITY, resnet18
 
 
 def run(budget_s: float = 60.0) -> dict:
     arch = default_arch()
+    layers = resnet18()
+    counts = [RESNET18_MULTIPLICITY.get(l.name, 1) for l in layers]
+    nets = {mode: optimize_network(layers, arch, mode, counts=counts,
+                                   per_layer_cap_s=budget_s)
+            for mode in ("miredo", "ws", "heuristic")}
     rows = []
-    total = {"miredo": 0.0, "ws": 0.0, "heuristic": 0.0}
-    for layer in resnet18():
-        recs = {m: solve_cached(layer, arch, m, budget_s=budget_s)
-                for m in ("miredo", "ws", "heuristic")}
-        mult = RESNET18_MULTIPLICITY.get(layer.name, 1)
-        for m in total:
-            total[m] += recs[m]["cycles"] * mult
+    for i, layer in enumerate(layers):
+        recs = {m: nets[m].layers[i].record for m in nets}
         rows.append([
             layer.name,
             f"{recs['heuristic']['cycles']:.3g}",
@@ -26,6 +29,7 @@ def run(budget_s: float = 60.0) -> dict:
             f"{recs['heuristic']['cycles'] / recs['miredo']['cycles']:.2f}x",
             f"{recs['ws']['cycles'] / recs['miredo']['cycles']:.2f}x",
         ])
+    total = {m: nets[m].totals["cycles"] for m in nets}
     rows.append(["TOTAL(weighted)", f"{total['heuristic']:.4g}",
                  f"{total['ws']:.4g}", f"{total['miredo']:.4g}",
                  f"{total['heuristic'] / total['miredo']:.2f}x",

@@ -1,10 +1,13 @@
 """Fig. 5(b–d): robustness across hardware configurations — macro geometry,
-core count, buffer capacities (paper shows consistent EDP reductions)."""
+core count, buffer capacities (paper shows consistent EDP reductions).
+Each configuration's layer set goes through the network pipeline (parallel
+budgeted solves; per-config results land in the shared cache)."""
 
 from __future__ import annotations
 
-from benchmarks.common import md_table, solve_cached, write_report
+from benchmarks.common import md_table, write_report
 from repro.core.arch import default_arch
+from repro.core.network import optimize_network
 from repro.core.workload import resnet18
 
 SWEEPS = {
@@ -38,13 +41,11 @@ def run(budget_s: float = 45.0, quick: bool = False) -> dict:
     for sweep, variants in SWEEPS.items():
         for tag, kw in variants:
             arch = default_arch(name=f"{sweep}-{tag}", **kw)
-            edp_m = edp_h = 0.0
-            for layer in layers:
-                rm = solve_cached(layer, arch, "miredo", budget_s=budget_s)
-                rh = solve_cached(layer, arch, "heuristic",
-                                  budget_s=budget_s)
-                edp_m += rm["edp"]
-                edp_h += rh["edp"]
+            nets = {mode: optimize_network(layers, arch, mode,
+                                           per_layer_cap_s=budget_s)
+                    for mode in ("miredo", "heuristic")}
+            edp_m = nets["miredo"].totals["edp"]
+            edp_h = nets["heuristic"].totals["edp"]
             ratio = edp_h / edp_m
             results[f"{sweep}/{tag}"] = ratio
             rows.append([sweep, tag, f"{edp_h:.4g}", f"{edp_m:.4g}",

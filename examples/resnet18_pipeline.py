@@ -1,44 +1,60 @@
 """Full-network pipeline: optimize every ResNet-18 layer (the paper's
-baseline workload, §V-A) end to end and report network-level latency/EDP
-against the ZigZag-style heuristic and the WS dataflow.
+baseline workload, §V-A) end to end via the network-level pipeline
+(core/network.py) and report network latency/EDP against the ZigZag-style
+heuristic and the WS dataflow.
+
+The pipeline dedups structurally identical layers, splits a global
+MAC-weighted solver budget across the unique ones, fans the MIP solves out
+over worker processes and caches every record on disk.
 
     PYTHONPATH=src python examples/resnet18_pipeline.py [--budget 45]
 """
 
 import argparse
 
-from benchmarks.common import solve_cached
 from repro.core.arch import default_arch
+from repro.core.network import optimize_network
 from repro.core.workload import RESNET18_MULTIPLICITY, resnet18
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--budget", type=float, default=45.0)
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer solver cap (s); the global budget "
+                         "defaults to half of cap * unique layers")
+    ap.add_argument("--total-budget", type=float, default=None,
+                    help="explicit global MIP wall-clock budget (s)")
+    ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args()
     arch = default_arch()
-    totals = {m: {"cycles": 0.0, "edp": 0.0}
-              for m in ("heuristic", "ws", "miredo")}
+    layers = resnet18()
+    counts = [RESNET18_MULTIPLICITY.get(l.name, 1) for l in layers]
+    nets = {}
+    for mode in ("heuristic", "ws", "miredo"):
+        nets[mode] = optimize_network(
+            layers, arch, mode, counts=counts,
+            per_layer_cap_s=args.budget, total_budget_s=args.total_budget,
+            workers=args.workers)
     print(f"{'layer':<12} {'heuristic':>12} {'WS':>12} {'MIREDO':>12} "
           f"{'speedup':>8}")
-    for layer in resnet18():
-        mult = RESNET18_MULTIPLICITY.get(layer.name, 1)
-        recs = {m: solve_cached(layer, arch, m, budget_s=args.budget)
-                for m in totals}
-        for m in totals:
-            totals[m]["cycles"] += recs[m]["cycles"] * mult
-            totals[m]["edp"] += recs[m]["edp"] * mult
+    for i, layer in enumerate(layers):
+        recs = {m: nets[m].layers[i].record for m in nets}
         print(f"{layer.name:<12} {recs['heuristic']['cycles']:>12,.0f} "
               f"{recs['ws']['cycles']:>12,.0f} "
               f"{recs['miredo']['cycles']:>12,.0f} "
               f"{recs['heuristic']['cycles']/recs['miredo']['cycles']:>7.2f}x")
     print("-" * 60)
-    print(f"network latency: heuristic {totals['heuristic']['cycles']:,.0f} "
-          f"| WS {totals['ws']['cycles']:,.0f} "
-          f"| MIREDO {totals['miredo']['cycles']:,.0f}")
+    t = {m: nets[m].totals for m in nets}
+    print(f"network latency: heuristic {t['heuristic']['cycles']:,.0f} "
+          f"| WS {t['ws']['cycles']:,.0f} "
+          f"| MIREDO {t['miredo']['cycles']:,.0f}")
     print(f"network EDP reduction vs heuristic: "
-          f"{totals['heuristic']['edp']/totals['miredo']['edp']:.2f}x, "
-          f"vs WS: {totals['ws']['edp']/totals['miredo']['edp']:.2f}x")
+          f"{t['heuristic']['edp']/t['miredo']['edp']:.2f}x, "
+          f"vs WS: {t['ws']['edp']/t['miredo']['edp']:.2f}x")
+    mn = nets["miredo"]
+    print(f"pipeline: {mn.n_unique} unique layers "
+          f"({len(mn.layers)} instances), {mn.cache_hits} cache hits, "
+          f"MIP wall {mn.wall_s:.0f}s")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,223 @@
+"""Mapping (de)serialization + on-disk solve-record cache.
+
+Promoted out of ``benchmarks/common.py`` so the network pipeline
+(``core/network.py``), the benchmark scripts and the examples all share one
+cache with one key schema (DESIGN.md §Network pipeline).
+
+Cache keys cover the *complete* solve identity:
+
+  * the layer structure (all loop bounds + stride — not the name, so
+    structurally identical layers share entries; this same key is the
+    network pipeline's dedup key),
+  * the full architecture description (hierarchy capacities/buses/serves,
+    spatial axes, timing constants),
+  * every ``FormulationConfig`` field that can change the result (the seed's
+    key omitted ``mu1``/``mu2_frac``/``latency_slack``/``mip_rel_gap``/
+    ``combo_cap`` and silently served stale mappings when objective weights
+    changed — hence ``CACHE_VERSION``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+from repro.core import workload as wl
+from repro.core.arch import CimArch
+from repro.core.mapping import Mapping
+
+CACHE_VERSION = 2   # v2: key covers all FormulationConfig fields
+
+#: Modes whose solves run the MIP (and therefore depend on every solver
+#: field); baseline modes only consume the factorization knobs.
+MIP_MODES = ("miredo", "ws")
+
+# Config fields with no effect on the solve result (excluded from the key).
+_CFG_KEY_EXCLUDE = ("verbose",)
+
+# Solver-only fields, canonicalized out of baseline-mode keys: a heuristic
+# record must hit the cache regardless of the MIP budget it ran beside.
+_NON_MIP_CANONICAL = dict(time_limit_s=0.0, mu1=1.0, mu2_frac=0.0,
+                          mip_rel_gap=0.0, combo_cap=0, latency_slack=0.0,
+                          weight_stationary=False)
+
+
+def default_cache_dir() -> str:
+    return os.environ.get("MIREDO_CACHE", "reports/cache")
+
+
+# ---------------------------------------------------------------------------
+# Mapping (de)serialization
+# ---------------------------------------------------------------------------
+
+def mapping_to_json(m: Mapping) -> dict:
+    return {
+        "spatial": {k: list(map(list, v)) for k, v in m.spatial.items()},
+        "temporal": list(map(list, m.temporal)),
+        "level_of": {k: list(v) for k, v in m.level_of.items()},
+        "double_buf": sorted(map(list, m.double_buf)),
+    }
+
+
+def mapping_from_json(d: dict) -> Mapping:
+    return Mapping(
+        spatial={k: tuple(tuple(x) for x in v)
+                 for k, v in d["spatial"].items()},
+        temporal=tuple(tuple(x) for x in d["temporal"]),
+        level_of={k: tuple(v) for k, v in d["level_of"].items()},
+        double_buf=frozenset((a, b) for a, b in d["double_buf"]))
+
+
+# ---------------------------------------------------------------------------
+# Key schema
+# ---------------------------------------------------------------------------
+
+def _digest(s: str) -> str:
+    return hashlib.sha1(s.encode()).hexdigest()[:12]
+
+
+def arch_cache_key(arch: CimArch) -> str:
+    parts = [arch.name]
+    for lv in arch.levels:
+        parts.append(f"{lv.name}:{lv.capacity_bytes}:{lv.bus_bits}:"
+                     f"{','.join(lv.serves)}:{int(lv.shared)}:"
+                     f"{int(lv.double_bufferable)}")
+    for ax in arch.spatial:
+        parts.append(f"{ax.name}:{ax.size}:{','.join(ax.dims)}:"
+                     f"{ax.at_level}:{ax.replicates_from}")
+    parts.append(f"{arch.l_mvm_cycles}:{arch.mode_switch_cycles}:"
+                 f"{arch.mac_energy_pj}")
+    return _digest("|".join(parts))
+
+
+def layer_cache_key(layer: wl.Layer) -> str:
+    """Structural key: loop bounds + stride, *not* the name — identical
+    shapes share cache entries and dedup to one solve."""
+    dims = ",".join(f"{d}={layer.bound(d)}" for d in wl.DIMS)
+    return _digest(f"{dims}|s{layer.stride}")
+
+
+def config_cache_key(cfg) -> str:
+    """Key over every result-affecting FormulationConfig field."""
+    items = sorted(
+        (k, v) for k, v in dataclasses.asdict(cfg).items()
+        if k not in _CFG_KEY_EXCLUDE)
+    return _digest("|".join(f"{k}={v!r}" for k, v in items))
+
+
+def solve_record_key(mode: str, layer: wl.Layer, arch: CimArch, cfg) -> str:
+    if mode not in MIP_MODES:
+        cfg = dataclasses.replace(cfg, **_NON_MIP_CANONICAL)
+    return (f"v{CACHE_VERSION}__{mode}__{layer_cache_key(layer)}"
+            f"__{arch_cache_key(arch)}__{config_cache_key(cfg)}")
+
+
+# ---------------------------------------------------------------------------
+# On-disk record cache
+# ---------------------------------------------------------------------------
+
+class ResultCache:
+    """JSON record store keyed by ``solve_record_key``; one file per record."""
+
+    def __init__(self, directory: str | None = None):
+        self.directory = directory or default_cache_dir()
+
+    def path(self, key: str) -> str:
+        return os.path.join(self.directory, key + ".json")
+
+    def get(self, key: str) -> dict | None:
+        p = self.path(key)
+        if not os.path.exists(p):
+            return None
+        try:
+            with open(p) as f:
+                return json.load(f)
+        except (json.JSONDecodeError, OSError):
+            return None          # partial write / corrupt entry: resolve
+
+    def put(self, key: str, rec: dict) -> str:
+        os.makedirs(self.directory, exist_ok=True)
+        p = self.path(key)
+        tmp = p + f".tmp{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, p)       # atomic vs concurrent workers
+        return p
+
+
+# ---------------------------------------------------------------------------
+# Solving (uncached core + cached wrapper)
+# ---------------------------------------------------------------------------
+
+def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
+                cfg=None) -> dict:
+    """One uncached solve. mode: 'miredo' | 'ws' | 'heuristic' | 'greedy' |
+    'random'. Returns {mode, layer, mapping, cycles, energy_pj, edp,
+    spatial_util, temporal_util, solve_s, status}.
+
+    MIP modes always return a feasible mapping: ``optimize_layer`` seeds the
+    solve with the greedy/heuristic incumbent (warm start) and falls back to
+    it when the time-capped solver finds nothing better.
+    """
+    from repro.core.baselines import greedy_mapping, heuristic_search
+    from repro.core.energy import evaluate_edp
+    from repro.core.formulation import FormulationConfig, optimize_layer
+
+    cfg = cfg or FormulationConfig()
+    t0 = time.monotonic()
+    if mode == "miredo":
+        res = optimize_layer(layer, arch, cfg)
+        mapping, status = res.mapping, res.status.name
+    elif mode == "ws":
+        c = dataclasses.replace(cfg, weight_stationary=True)
+        res = optimize_layer(layer, arch, c)
+        mapping, status = res.mapping, res.status.name
+    elif mode == "heuristic":
+        r = heuristic_search(layer, arch, budget=2000, seed=0,
+                             accurate=False, k_min=cfg.k_min,
+                             alpha=cfg.alpha)
+        mapping, status = r.mapping, "HEURISTIC"
+    elif mode == "random":
+        r = heuristic_search(layer, arch, budget=2000, seed=0,
+                             accurate=True, k_min=cfg.k_min, alpha=cfg.alpha)
+        mapping, status = r.mapping, "RANDOM"
+    elif mode == "greedy":
+        mapping, status = greedy_mapping(layer, arch), "GREEDY"
+    else:
+        raise ValueError(mode)
+    assert mapping is not None, (mode, layer.name)
+    edp = evaluate_edp(mapping, layer, arch)
+    return {
+        "mode": mode,
+        "layer": layer.name,
+        "mapping": mapping_to_json(mapping),
+        "cycles": edp.latency.total_cycles,
+        "energy_pj": edp.energy.total_pj,
+        "edp": edp.edp,
+        "spatial_util": edp.latency.spatial_util,
+        "temporal_util": edp.latency.temporal_util,
+        "solve_s": round(time.monotonic() - t0, 1),
+        "status": status,
+    }
+
+
+def solve_cached(layer: wl.Layer, arch: CimArch, mode: str,
+                 cfg=None, budget_s: float = 60.0,
+                 cache: ResultCache | None = None) -> dict:
+    """Cached single-layer solve (the seed benchmark entry point, now
+    library-level). Prefer ``network.optimize_network`` for whole models —
+    it dedups, allocates budget and fans out across processes."""
+    from repro.core.formulation import FormulationConfig
+
+    cfg = cfg or FormulationConfig(time_limit_s=budget_s)
+    cache = cache or ResultCache()
+    key = solve_record_key(mode, layer, arch, cfg)
+    rec = cache.get(key)
+    if rec is not None:
+        return rec
+    rec = solve_layer(layer, arch, mode, cfg)
+    cache.put(key, rec)
+    return rec

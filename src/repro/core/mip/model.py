@@ -221,7 +221,9 @@ class MipModel:
             constraints=constraints,
             integrality=np.array([1 if b else 0 for b in self._int]),
             bounds=Bounds(np.array(self._lb), np.array(self._ub)),
-            options={"time_limit": time_limit_s, "mip_rel_gap": mip_rel_gap,
+            # a negative limit would reach HiGHS as "unlimited" — clamp
+            options={"time_limit": max(0.0, time_limit_s),
+                     "mip_rel_gap": mip_rel_gap,
                      "disp": verbose},
         )
         if res.status == 0:

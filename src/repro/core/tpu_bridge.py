@@ -46,12 +46,28 @@ class BlockChoice:
     status: str
 
 
+def _round_up(x: int, align: int) -> int:
+    return -(-x // align) * align
+
+
 def _candidates(dim: int, *, align: int, cap: int) -> list[int]:
+    """MXU-legal block-size candidates for one dim: aligned divisors of the
+    dim when any exist, else the dim padded up to alignment (clamped to an
+    aligned cap). Every returned candidate is a multiple of ``align`` — an
+    unaligned block shape is illegal for the MXU regardless of fit."""
     out = [c for c in (128, 256, 512, 1024, 2048)
            if c <= min(dim, cap) and dim % c == 0 and c % align == 0]
+    if not out and dim % align == 0 and align <= dim <= cap:
+        out = [dim]                       # aligned dim smaller than 128
     if not out:
-        out = [dim if dim % align == 0 else max(align, dim)]
-        out = [c for c in out if dim % c == 0] or [dim]
+        # no aligned divisor exists: offer every aligned size up to the dim
+        # padded to alignment (clamped to an aligned cap) — callers
+        # (kernels/matmul_int8/ops.py) zero-pad the array to the block
+        padded = min(_round_up(dim, align), max(align, cap - cap % align))
+        out = [c for c in (128, 256, 512, 1024, 2048)
+               if c % align == 0 and c <= padded]
+        if padded not in out:
+            out.append(padded)
     return out
 
 
@@ -79,9 +95,9 @@ def select_matmul_blocks(m: int, k: int, n: int, *,
     # out written once — the weight-reload analogue.
     traffic = LinExpr({}, float(m * n * bytes_acc))
     for c, v in zip(cn, vn):
-        traffic = traffic + (m * k * bytes_in) * (n / c) * v
+        traffic = traffic + (m * k * bytes_in) * math.ceil(n / c) * v
     for c, v in zip(cm, vm):
-        traffic = traffic + (k * n * bytes_in) * (m / c) * v
+        traffic = traffic + (k * n * bytes_in) * math.ceil(m / c) * v
     t_hbm_scale = 1.0 / HBM_BW
     t_mxu = 2.0 * m * n * k / MXU_FLOPS
 

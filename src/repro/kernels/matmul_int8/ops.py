@@ -27,8 +27,19 @@ def quantized_matmul(x: jax.Array, w: jax.Array, *,
     if not use_kernel:
         return matmul_int8_ref(x_q, w_q, x_s, w_s, out_dtype)
     bm, bk, bn = block_shapes or default_blocks(m, k, n)
-    return matmul_int8(x_q, w_q, x_s, w_s, bm=bm, bk=bk, bn=bn,
-                       out_dtype=out_dtype, interpret=interpret)
+    # The bridge may return MXU-aligned blocks that do not divide the dims
+    # (dims without an aligned divisor are padded up): zero-pad the
+    # quantized operands to block multiples — padded K contributes 0 to the
+    # int32 accumulator, padded M/N rows/cols are sliced off the output.
+    mp, kp, np_ = (-(-d // b) * b for d, b in ((m, bm), (k, bk), (n, bn)))
+    if (mp, kp, np_) != (m, k, n):
+        x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+        w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+        x_s = jnp.pad(x_s, (0, mp - m))
+        w_s = jnp.pad(w_s, (0, np_ - n))
+    out = matmul_int8(x_q, w_q, x_s, w_s, bm=bm, bk=bk, bn=bn,
+                      out_dtype=out_dtype, interpret=interpret)
+    return out[:m, :n]
 
 
 def default_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:

@@ -1,9 +1,61 @@
-"""Property tests for Flexible Factorization (paper Alg. 1)."""
+"""Property tests for Flexible Factorization (paper Alg. 1).
+
+Runs under ``hypothesis`` when available; otherwise falls back to a small
+seeded-random strategy shim so the tier-1 suite collects and the invariants
+still get exercised on a bare environment (no extra deps required).
+"""
 
 import math
+import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # seeded fallback
+    _N_EXAMPLES = 60
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def floats(lo, hi):
+            return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(lambda rng: rng.choice(list(seq)))
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                elem.draw(rng)
+                for _ in range(rng.randint(min_size, max_size))])
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                for _ in range(_N_EXAMPLES):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(**_kwargs):
+        return lambda fn: fn
 
 from repro.core.factorization import (flex_score, flexible_factorization,
                                       prime_factors, sub_multiset_products)

@@ -53,6 +53,25 @@ def test_quantized_matmul_close_to_fp(dtype):
     assert rel < 0.03, rel
 
 
+def test_quantized_matmul_bridge_padded_blocks():
+    """Regression: bridge blocks for dims with no MXU-aligned divisor
+    (n=360 -> bn=384 padded) must run through the kernel via zero-padding
+    instead of tripping the divisibility assert."""
+    from repro.core.tpu_bridge import select_matmul_blocks
+    c = select_matmul_blocks(512, 256, 360)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((512, 256)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((256, 360)) * 0.1, jnp.float32)
+    out = quantized_matmul(x, w, block_shapes=(c.bm, c.bk, c.bn),
+                           use_kernel=True, interpret=True,
+                           out_dtype=jnp.float32)
+    assert out.shape == (512, 360)
+    exact = x @ w
+    rel = np.linalg.norm(np.asarray(out) - np.asarray(exact)) / \
+        np.linalg.norm(np.asarray(exact))
+    assert rel < 0.03, rel
+
+
 def test_quantize_roundtrip():
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)

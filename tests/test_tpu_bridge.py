@@ -1,10 +1,12 @@
 """MIREDO TPU bridge: MIP-selected Pallas blocks respect VMEM (eq. 9 with
 double-buffering), MXU alignment, and beat naive choices on HBM traffic."""
 
+import math
+
 import pytest
 
-from repro.core.tpu_bridge import (LANE, SUBLANE, VMEM_BYTES,
-                                   select_flash_blocks,
+from repro.core.tpu_bridge import (LANE, SUBLANE, VMEM_BYTES, _candidates,
+                                   _round_up, select_flash_blocks,
                                    select_matmul_blocks)
 
 
@@ -13,15 +15,20 @@ def traffic(m, k, n, bm, bn):
 
 
 @pytest.mark.parametrize("m,k,n", [
-    (65536, 2304, 360),        # minicpm ffn shard
+    (65536, 2304, 360),        # minicpm ffn shard (n has no aligned divisor)
     (65536, 6144, 1024),       # internlm2 ffn shard
     (4096, 4096, 4096),
 ])
 def test_matmul_blocks_valid(m, k, n):
     c = select_matmul_blocks(m, k, n)
-    assert m % c.bm == 0 and k % c.bk == 0 and n % c.bn == 0
-    assert c.bk % LANE == 0 or c.bk == k
-    assert c.bm % SUBLANE == 0 or c.bm == m
+    # MXU legality is unconditional; divisibility holds whenever an aligned
+    # divisor exists, else the block covers the padded dim.
+    assert c.bm % SUBLANE == 0
+    assert c.bk % LANE == 0
+    assert c.bn % LANE == 0
+    for dim, blk, align in ((m, c.bm, SUBLANE), (k, c.bk, LANE),
+                            (n, c.bn, LANE)):
+        assert dim % blk == 0 or blk <= _round_up(dim, align)
     mult = 2 if c.double_buffered else 1
     assert mult * c.vmem_bytes <= VMEM_BYTES, (c,)
 
@@ -32,6 +39,38 @@ def test_blocks_beat_smallest():
     m, k, n = 65536, 6144, 1024
     c = select_matmul_blocks(m, k, n)
     assert traffic(m, k, n, c.bm, c.bn) <= traffic(m, k, n, 128, 128) + 1
+
+
+def test_candidates_always_aligned():
+    """Regression: dim % align != 0 used to fall back to the raw dim,
+    producing MXU-illegal block shapes (e.g. bn=100 with LANE=128)."""
+    for dim, align in ((100, 128), (360, 128), (100, 8), (2304, 128),
+                       (1, 128), (4096, 128), (5000, 128)):
+        cands = _candidates(dim, align=align, cap=2048)
+        assert cands, (dim, align)
+        for c in cands:
+            assert c % align == 0, (dim, align, c)
+            assert c <= max(align, _round_up(min(dim, 2048), align))
+
+
+def test_candidates_pad_and_clamp():
+    assert _candidates(100, align=128, cap=2048) == [128]   # pad up
+    assert _candidates(104, align=8, cap=2048) == [104]     # already aligned
+    # no aligned divisor: full aligned ladder up to the padded dim
+    assert _candidates(360, align=128, cap=2048) == [128, 256, 384]
+    # clamped to aligned values <= cap
+    assert _candidates(5000, align=128, cap=2048) == \
+        [128, 256, 512, 1024, 2048]
+    big = _candidates(3000, align=128, cap=2048)
+    assert all(c <= 2048 and c % 128 == 0 for c in big)
+
+
+def test_matmul_blocks_unaligned_dims_stay_legal():
+    c = select_matmul_blocks(100, 100, 100)
+    assert c.bm % SUBLANE == 0 and c.bk % LANE == 0 and c.bn % LANE == 0
+    assert c.bk == 128 and c.bn == 128                      # padded to MXU
+    mult = 2 if c.double_buffered else 1
+    assert mult * c.vmem_bytes <= VMEM_BYTES
 
 
 def test_flash_blocks_fit():
