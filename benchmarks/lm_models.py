@@ -1,0 +1,135 @@
+"""LM model zoo through the MIREDO pipeline: per-model, per-scenario
+aggregate EDP for every registry architecture.
+
+The model frontend (`core/frontend.py`) lowers each ``ModelConfig`` under
+each applicable ``ShapeSpec`` (train / prefill / decode / long-decode) to
+its weight-GEMM workload; all (model, scenario) workloads are pooled into
+ONE network-pipeline call per mode, so structurally identical GEMMs dedup
+across depth, batch, scenarios *and models* to a single MIP solve with a
+shared MAC-weighted wall-clock budget.
+
+Registered as the ``lm`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python -m benchmarks.lm_models --quick
+    PYTHONPATH=src python -m benchmarks.lm_models \\
+        --archs minicpm-2b --reduced --scenarios prefill_32k,decode_32k
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import md_table, write_report
+from repro.configs import ARCH_IDS, get_config
+from repro.core.arch import default_arch
+from repro.core.cache import MIP_MODES
+from repro.core.frontend import extract_all
+from repro.core.network import dedup_layers, optimize_network
+
+#: Scenario subset for ``--quick`` (full runs take every applicable cell).
+QUICK_SCENARIOS = ("prefill_32k", "decode_32k")
+#: Quick-mode solver knobs: per-layer cap and average seconds per unique
+#: solve (the pooled zoo is ~110 unique GEMMs; 1.5 s each keeps the whole
+#: job within a few minutes while the warm start guarantees feasibility).
+QUICK_CAP_S = 3.0
+QUICK_AVG_S = 1.5
+
+
+def run(budget_s: float = 45.0, quick: bool = False,
+        archs: tuple[str, ...] | None = None,
+        scenarios: tuple[str, ...] | None = None,
+        reduced: bool = False,
+        modes: tuple[str, ...] = ("miredo", "heuristic"),
+        workers: int | None = None) -> dict:
+    arch = default_arch()
+    arch_ids = tuple(archs) if archs else ARCH_IDS
+    scen = tuple(scenarios) if scenarios else (
+        QUICK_SCENARIOS if quick else None)
+
+    works = []                       # (arch_id, ModelWorkload) in row order
+    for aid in arch_ids:
+        cfg = get_config(aid)
+        if reduced:
+            cfg = cfg.reduced()
+        for work in extract_all(cfg, scen).values():
+            works.append((aid, work))
+    pooled = [l for _, w in works for l in w.layers]
+    counts = [c for _, w in works for c in w.counts]
+    n_unique = len(dedup_layers(pooled)[0])
+    print(f"[frontend] {len(works)} (model, scenario) workloads -> "
+          f"{len(pooled)} extracted layers, {n_unique} unique solves "
+          f"(structural dedup x{len(pooled) / max(n_unique, 1):.2f})")
+
+    cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+    total = QUICK_AVG_S * n_unique if quick else None
+    nets = {m: optimize_network(pooled, arch, m, counts=counts,
+                                per_layer_cap_s=cap, total_budget_s=total,
+                                workers=workers)
+            for m in modes}
+
+    base = next((m for m in modes if m not in MIP_MODES), None)
+    headers = ["model", "scenario", "layers", "unique", "MACs"] + \
+        [f"{m} EDP" for m in modes] + \
+        (["reduction"] if base and "miredo" in modes else [])
+    rows, table = [], []
+    off = 0
+    for aid, work in works:
+        sl = slice(off, off + len(work))
+        off += len(work)
+        edp = {m: sum(lr.edp * lr.count for lr in nets[m].layers[sl])
+               for m in modes}
+        row = {"model": aid, "scenario": work.scenario,
+               "layers": len(work), "unique": work.n_unique,
+               "macs": work.total_macs, "edp": edp}
+        rows.append(row)
+        line = [aid, work.scenario, len(work), work.n_unique,
+                f"{work.total_macs:.3g}"] + \
+               [f"{edp[m]:.4g}" for m in modes]
+        if base and "miredo" in modes:
+            line.append(f"{edp[base] / edp['miredo']:.2f}x")
+        table.append(line)
+
+    payload = {
+        "rows": rows,
+        "n_extracted": len(pooled), "n_unique": n_unique,
+        "pipeline": {m: {"wall_s": n.wall_s, "n_unique": n.n_unique,
+                         "n_solved": n.n_solved, "cache_hits": n.cache_hits}
+                     for m, n in nets.items()},
+    }
+    write_report("lm_models", payload)
+    print(md_table(headers, table))
+    for m in modes:
+        n = nets[m]
+        print(f"[pipeline/{m}] {n.n_unique} unique, {n.n_solved} solved, "
+              f"{n.cache_hits} cached, wall {n.wall_s:.0f}s")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer MIP cap (seconds)")
+    ap.add_argument("--archs", default="",
+                    help=f"comma list of arch ids (default: all of "
+                         f"{', '.join(ARCH_IDS)})")
+    ap.add_argument("--scenarios", default="",
+                    help="comma list of ShapeSpec names "
+                         "(default: all applicable; quick: "
+                         + ",".join(QUICK_SCENARIOS) + ")")
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the CPU smoke-test reduction of each config")
+    ap.add_argument("--modes", default="miredo,heuristic")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick,
+        archs=tuple(a for a in args.archs.split(",") if a) or None,
+        scenarios=tuple(s for s in args.scenarios.split(",") if s) or None,
+        reduced=args.reduced,
+        modes=tuple(m for m in args.modes.split(",") if m),
+        workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

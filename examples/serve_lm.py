@@ -1,6 +1,8 @@
 """Serving example: prefill + batched autoregressive decode with KV caches
 (reduced glm4-9b config on CPU; the same step functions the dry-run lowers
-for the production mesh).
+for the production mesh), then the CIM side of the same question: the model
+frontend (core/frontend.py) lowers this exact serving config to its
+weight-GEMM workload and MIREDO reports the optimized dataflow mapping.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -12,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.configs.base import ShapeSpec
 from repro.train.steps import (StepConfig, init_train_state,
                                make_decode_step, make_prefill_step)
 
@@ -52,7 +55,43 @@ def main():
     print("sample token ids:", np.asarray(out[0])[:12], "...")
     assert out.shape == (batch, gen_len + 1)
     assert np.all(np.asarray(out) >= 0)
+
+    report_cim_dataflow(cfg, batch)
     print("OK")
+
+
+def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0):
+    """What dataflow should a CIM accelerator use for this serving config?
+
+    Lowers the decode step of the served config to its weight-GEMM
+    workload and runs the network pipeline (one MIP per unique GEMM,
+    warm-started so the capped solves stay feasible)."""
+    from repro.core.arch import default_arch
+    from repro.core.frontend import extract_workload
+    from repro.core.network import optimize_network
+
+    spec = ShapeSpec("serve_decode", seq_len=1, global_batch=batch,
+                     kind="decode")
+    work = extract_workload(cfg, spec)
+    # workers=1: this process already initialized JAX; forking a solver
+    # pool after that risks deadlock, and the reduced config only has a
+    # handful of unique solves anyway.
+    net = optimize_network(list(work.layers), default_arch(), "miredo",
+                           counts=list(work.counts),
+                           per_layer_cap_s=budget_s, workers=1)
+    print(f"\nCIM dataflow for {cfg.name} decode (batch={batch}): "
+          f"{len(work)} GEMMs, {net.n_unique} unique solves, "
+          f"aggregate EDP {net.totals['edp']:.3e} "
+          f"({net.totals['cycles']:.3g} cycles)")
+    top = max(net.layers, key=lambda lr: lr.edp * lr.count)
+    mp = top.record["mapping"]
+    # GEMM-speak (M x K) @ (K x N): loop-nest N=M, C=K(reduction), K=N
+    print(f"heaviest GEMM {top.layer.name} "
+          f"(M={top.layer.bound('N')}, N={top.layer.bound('K')}, "
+          f"K={top.layer.bound('C')}) x{top.count}:")
+    print("  spatial :", mp["spatial"])
+    print("  temporal:", mp["temporal"])
+    print("  dbl-buf :", mp["double_buf"])
 
 
 if __name__ == "__main__":

@@ -146,6 +146,21 @@ class ShapeSpec:
     def is_decode(self) -> bool:
         return self.kind == "decode"
 
+    # -- model-frontend lowering (core/frontend.py; DESIGN.md §Model
+    # frontend). Scenarios differ only in where tokens land: prefill/train
+    # GEMMs see the full sequence as the M dim with the batch as workload
+    # multiplicity; a decode step sees one token per sequence, batched into
+    # a single M = global_batch MVM.
+    @property
+    def m_tokens(self) -> int:
+        """GEMM M dim of one extracted weight-GEMM instance."""
+        return self.global_batch if self.is_decode else self.seq_len
+
+    @property
+    def instance_count(self) -> int:
+        """Workload multiplicity contributed by the batch."""
+        return 1 if self.is_decode else self.global_batch
+
 
 SHAPES = {
     "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),

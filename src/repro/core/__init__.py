@@ -4,3 +4,5 @@ factorization, analytical latency model, MIP formulation, baselines)."""
 from repro.core.arch import CimArch, default_arch, INPUT, WEIGHT, OUTPUT
 from repro.core.workload import Layer, conv, gemm
 from repro.core.mapping import Mapping
+from repro.core.frontend import (ModelWorkload, extract_all,
+                                 extract_workload, optimize_model)

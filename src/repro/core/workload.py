@@ -13,7 +13,11 @@ Every supported operator is expressed over the canonical 7-dim conv loop nest
 GEMM  (M x K_red) @ (K_red x N_out)  is the special case
     N=M, K=N_out, C=K_red, OY=OX=FY=FX=1,
 which is how every LM-architecture layer (attention projections, FFN mats,
-MoE expert GEMMs, SSD block matmuls) enters MIREDO.
+MoE expert GEMMs, SSD block matmuls) enters MIREDO: the model frontend
+(``core/frontend.py`` + ``core/lm_workloads.py``) lowers every registry
+``ModelConfig`` under a ``ShapeSpec`` scenario to this form and feeds it
+through the network pipeline. This module keeps only the canonical
+representation and the conv-zoo tables.
 
 Operand relevance (which dims index which tensor):
     I: N, C, IY(OY,FY), IX(OX,FX)       W: K, C, FY, FX       O: N, K, OY, OX
@@ -188,8 +192,11 @@ def bert_base_layer(seq: int = 128) -> list[Layer]:
 def lm_block_gemms(name: str, d_model: int, n_heads: int, kv_heads: int,
                    d_ff: int, seq: int, *, gated: bool = True,
                    n_experts: int = 0, top_k: int = 0) -> list[Layer]:
-    """Extract the GEMM workloads of one LM transformer block — the bridge
-    from this repo's assigned architectures into MIREDO's optimizer."""
+    """GEMM workloads of one hand-parameterized LM transformer block.
+
+    Kept for the fig5a block-level comparison; whole-model extraction from
+    a registry ``ModelConfig`` (GQA KV sizing, shared experts, SSD blocks,
+    scenarios) lives in ``core/frontend.py``."""
     head_dim = d_model // n_heads
     ls = [
         gemm(f"{name}.wq", seq, n_heads * head_dim, d_model),
