@@ -1,0 +1,197 @@
+"""Hardware/dataflow co-design Pareto frontier (`core/dse.py`,
+DESIGN.md §Co-design DSE): sweep a ``CimArch`` grid against an LM-frontend
+(or conv-zoo) workload — cheap incumbent screening prunes the grid, the
+survivors get warm-started MIP solves through `network.optimize_over_archs`
+with one shared arch-keyed cache — and report the non-dominated
+(latency, energy, area = macros x crossbar bits) points, every frontier
+mapping re-checked by the mapping validator.
+
+Registered as the ``dse`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python benchmarks/dse_pareto.py --reduced
+    PYTHONPATH=src python benchmarks/dse_pareto.py \\
+        --models minicpm-2b --scenarios decode_32k --workload lm
+    PYTHONPATH=src python benchmarks/dse_pareto.py --workload resnet18
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+if __package__ in (None, ""):      # `python benchmarks/dse_pareto.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import md_table, write_report
+from repro.core.dse import ArchSpace, run_dse
+from repro.core.workload import RESNET18_MULTIPLICITY, resnet18
+
+#: Default LM workload: two small registry models; ``--reduced`` swaps in
+#: their CPU smoke-test reductions so the whole frontier lands in minutes.
+DEFAULT_MODELS = ("minicpm-2b", "glm4-9b")
+DEFAULT_SCENARIOS = ("decode_32k", "prefill_32k")
+#: Quick-mode solver knobs (same spirit as benchmarks/lm_models.py): a
+#: small per-layer cap plus ~1 s of global budget per unique layer per
+#: arch; the warm start keeps every capped solve feasible.
+QUICK_CAP_S = 2.0
+QUICK_AVG_S = 1.0
+
+
+def default_space() -> ArchSpace:
+    """24-point grid: 3 macro geometries x 2 core counts x 2 GBuf x 2 LBuf
+    capacities. Buffer knobs deliberately include small points — they
+    create the dominated/tied archs the screening pass exists to prune."""
+    return ArchSpace(macro=((64, 32), (128, 32), (256, 64)),
+                     n_cores=(4, 16),
+                     gbuf_kb=(2.0, 8.0),
+                     lbuf_kb=(16.0, 256.0))
+
+
+def lm_workload(models: tuple[str, ...], scenarios: tuple[str, ...],
+                reduced: bool) -> tuple[list, list]:
+    from repro.configs import get_config
+    from repro.core.frontend import extract_all
+
+    layers, counts = [], []
+    for mid in models:
+        cfg = get_config(mid)
+        if reduced:
+            cfg = cfg.reduced()
+        for work in extract_all(cfg, scenarios).values():
+            layers += list(work.layers)
+            counts += list(work.counts)
+    return layers, counts
+
+
+def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
+        workload: str = "lm",
+        models: tuple[str, ...] = DEFAULT_MODELS,
+        scenarios: tuple[str, ...] = DEFAULT_SCENARIOS,
+        mode: str = "miredo", slack: float = 0.25,
+        screen_samples: int = 64, no_screen: bool = False,
+        workers: int | None = None) -> dict:
+    quick = quick or reduced
+    if workload == "lm":
+        layers, counts = lm_workload(models, scenarios, reduced)
+        wl_name = f"lm[{','.join(models)}|{','.join(scenarios)}" + \
+            ("|reduced]" if reduced else "]")
+    elif workload == "resnet18":
+        layers = resnet18()
+        counts = [RESNET18_MULTIPLICITY.get(l.name, 1) for l in layers]
+        wl_name = "resnet18"
+    else:
+        raise ValueError(f"unknown workload {workload!r}")
+
+    space = default_space()
+    from repro.core.network import dedup_layers
+    n_unique = len(dedup_layers(layers)[0])
+    cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+    total = QUICK_AVG_S * n_unique if quick else None
+    print(f"[dse] workload {wl_name}: {len(layers)} layers, {n_unique} "
+          f"unique; grid {space.size} archs, cap {cap:g}s/layer")
+
+    res = run_dse(layers, counts, space, mode,
+                  screen=not no_screen, screen_slack=slack,
+                  screen_samples=screen_samples,
+                  per_layer_cap_s=cap, total_budget_s=total,
+                  workers=workers, verbose=True)
+
+    frontier_names = {p.arch_name for p in res.frontier}
+    rows = []
+    for name, sp in res.screen_points.items():
+        mp = res.points.get(name)
+        rows.append([
+            name,
+            f"{sp.area_bits:,}",
+            f"{sp.cycles:.3g}", f"{sp.energy_pj:.3g}",
+            f"{mp.cycles:.3g}" if mp else "pruned",
+            f"{mp.energy_pj:.3g}" if mp else "-",
+            f"{mp.edp:.4g}" if mp else "-",
+            ("FRONTIER" if name in frontier_names else
+             ("" if mp else "pruned")),
+        ])
+    print(md_table(["arch", "area bits", "screen cyc", "screen pJ",
+                    "MIP cyc", "MIP pJ", "MIP EDP", ""], rows))
+
+    n_bad = sum(bool(v) for v in res.validation.values())
+    print(f"[dse] pruned {len(res.pruned)}/{len(res.archs)} "
+          f"({100 * res.prune_fraction:.0f}%), frontier "
+          f"{len(res.frontier)} non-dominated archs, "
+          f"{'ALL mappings valid' if n_bad == 0 else f'{n_bad} INVALID'}, "
+          f"wall {res.wall_s:.0f}s")
+    if n_bad:
+        bad = {n: v for n, v in res.validation.items() if v}
+        raise RuntimeError(f"invalid frontier mappings: {bad}")
+    # --reduced is the CI acceptance path (dse-smoke): enforce the frontier
+    # quality gates instead of warning, so regressions fail the job.
+    if reduced and not no_screen and res.prune_fraction < 0.5:
+        raise RuntimeError(
+            f"screening pruned only {100 * res.prune_fraction:.0f}% "
+            f"of the grid (acceptance: >=50%)")
+    if reduced and len(res.frontier) < 3:
+        raise RuntimeError(
+            f"degenerate frontier: {len(res.frontier)} archs "
+            f"(acceptance: >=3 non-dominated)")
+    if res.prune_fraction < 0.5:
+        print("[dse] WARNING: screening pruned <50% of the grid")
+    if len(res.frontier) < 3:
+        print("[dse] WARNING: degenerate frontier (<3 archs)")
+
+    payload = {
+        "workload": wl_name, "mode": mode,
+        "grid": len(res.archs), "survivors": len(res.survivors),
+        "pruned": len(res.pruned), "prune_fraction": res.prune_fraction,
+        "frontier": [
+            {"arch": p.arch_name, "cycles": p.cycles,
+             "energy_pj": p.energy_pj, "area_bits": p.area_bits,
+             "edp": p.edp, "valid": not res.validation.get(p.arch_name)}
+            for p in res.frontier],
+        "frontier_validated": n_bad == 0,
+        "points": {n: {"cycles": p.cycles, "energy_pj": p.energy_pj,
+                       "area_bits": p.area_bits, "edp": p.edp}
+                   for n, p in res.points.items()},
+        "screen": {n: {"cycles": p.cycles, "energy_pj": p.energy_pj}
+                   for n, p in res.screen_points.items()},
+        "wall_s": res.wall_s,
+    }
+    write_report("dse_pareto", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick solver caps (implied by --reduced)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke-test reductions of the LM configs "
+                         "+ quick caps")
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer MIP cap (seconds; quick mode clamps)")
+    ap.add_argument("--workload", default="lm",
+                    choices=("lm", "resnet18"))
+    ap.add_argument("--models", default=",".join(DEFAULT_MODELS),
+                    help="comma list of registry arch ids (lm workload)")
+    ap.add_argument("--scenarios", default=",".join(DEFAULT_SCENARIOS),
+                    help="comma list of ShapeSpec names (lm workload)")
+    ap.add_argument("--mode", default="miredo")
+    ap.add_argument("--slack", type=float, default=0.25,
+                    help="screening prune slack (see DESIGN.md)")
+    ap.add_argument("--screen-samples", type=int, default=64)
+    ap.add_argument("--no-screen", action="store_true",
+                    help="exhaustive MIP over the whole grid (no pruning)")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
+        workload=args.workload,
+        models=tuple(m for m in args.models.split(",") if m),
+        scenarios=tuple(s for s in args.scenarios.split(",") if s),
+        mode=args.mode, slack=args.slack,
+        screen_samples=args.screen_samples, no_screen=args.no_screen,
+        workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

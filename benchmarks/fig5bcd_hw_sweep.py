@@ -1,7 +1,14 @@
 """Fig. 5(b–d): robustness across hardware configurations — macro geometry,
 core count, buffer capacities (paper shows consistent EDP reductions).
-Each configuration's layer set goes through the network pipeline (parallel
-budgeted solves; per-config results land in the shared cache)."""
+
+Each preset is a `default_arch` knob variant whose layer set runs through
+`network.optimize_network` (structural dedup, MAC-weighted budgets,
+process fan-out — DESIGN.md §Network pipeline); records land in the
+shared arch-keyed cache, so presets never collide and reruns are
+incremental. This benchmark reproduces the paper's three hand-picked
+sweeps; *systematic* architecture exploration — screened grids, Pareto
+frontier over (latency, energy, area) — is `benchmarks/dse_pareto.py` on
+top of `core/dse.py` (DESIGN.md §Co-design DSE)."""
 
 from __future__ import annotations
 

@@ -82,6 +82,22 @@ def bench_section() -> str:
         out.append("**TPU bridge (beyond paper):** MIP-selected Pallas "
                    "blocks per arch in `reports/benchmarks/tpu_bridge.json`"
                    f"; flash blocks @32k = {tb['flash_blocks_32k']}.")
+    dse = load("dse_pareto")
+    if dse:
+        lines = [
+            f"**Co-design DSE (beyond paper)** — workload "
+            f"`{dse['workload']}`: screening pruned {dse['pruned']}/"
+            f"{dse['grid']} archs ({100 * dse['prune_fraction']:.0f}%), "
+            f"{len(dse['frontier'])} non-dominated survivors"
+            f"{', all frontier mappings valid' if dse['frontier_validated'] else ' (INVALID mappings!)'}."
+            " Frontier (ascending area):", "",
+            "| arch | area bits | cycles | energy pJ | EDP |",
+            "|---|---|---|---|---|"]
+        for p in dse["frontier"]:
+            lines.append(f"| {p['arch']} | {p['area_bits']:,} | "
+                         f"{p['cycles']:.3g} | {p['energy_pj']:.3g} | "
+                         f"{p['edp']:.4g} |")
+        out.append("\n".join(lines))
     return "\n\n".join(out)
 
 

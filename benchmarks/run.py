@@ -1,9 +1,11 @@
 """Benchmark harness entry point: ``PYTHONPATH=src python -m benchmarks.run``
 
-One benchmark per paper table/figure (+ the beyond-paper TPU bridge and
-the ``lm`` job: the whole LM model zoo lowered through the model frontend,
-``benchmarks/lm_models.py``). ``--quick`` trims solve budgets; results
-cache under reports/cache so reruns are incremental.
+One benchmark per paper table/figure, plus the beyond-paper jobs: the TPU
+bridge, the ``lm`` job (the whole LM model zoo lowered through the model
+frontend, ``benchmarks/lm_models.py``) and the ``dse`` job (hardware/
+dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``).
+``--quick`` trims solve budgets; results cache under reports/cache so
+reruns are incremental.
 """
 
 from __future__ import annotations
@@ -18,14 +20,15 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm")
+                         "flexfact,bridge,lm,dse")
     args = ap.parse_args(argv)
     budget = 20.0 if args.quick else 60.0
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig4a_model_accuracy, fig4b_utilization_edp,
-                            fig4c_per_layer, fig5a_models, fig5bcd_hw_sweep,
-                            lm_models, tab_flexfact, tpu_bridge_bench)
+    from benchmarks import (dse_pareto, fig4a_model_accuracy,
+                            fig4b_utilization_edp, fig4c_per_layer,
+                            fig5a_models, fig5bcd_hw_sweep, lm_models,
+                            tab_flexfact, tpu_bridge_bench)
 
     jobs = [
         ("fig4a", lambda: fig4a_model_accuracy.run(
@@ -39,6 +42,8 @@ def main(argv=None):
         ("flexfact", lambda: tab_flexfact.run(budget_s=min(budget, 45.0))),
         ("bridge", tpu_bridge_bench.run),
         ("lm", lambda: lm_models.run(budget_s=budget, quick=args.quick)),
+        ("dse", lambda: dse_pareto.run(budget_s=budget, quick=args.quick,
+                                       reduced=args.quick)),
     ]
     failures = []
     for name, fn in jobs:

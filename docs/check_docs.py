@@ -1,0 +1,146 @@
+"""Keep docs/tutorial.md runnable: every ```bash command block must parse.
+
+For each fenced ```bash block in the checked docs, every command line that
+invokes a repo script (``python path/to/script.py`` or
+``python -m pkg.module``) is verified three ways:
+
+  1. the referenced file exists in the repo,
+  2. it parses (`ast.parse`),
+  3. if it is an argparse CLI (declares ``argparse``), it is executed with
+     ``--help`` (original args dropped, ``PYTHONPATH=src``) and must exit 0
+     — so a renamed flag, moved script or import-time crash in a documented
+     command fails CI instead of rotting silently.
+
+External tools (pytest, pip, ...) are reported but not executed. Run from
+the repo root:
+
+    python docs/check_docs.py [--no-exec]
+
+Exit code 0 = every documented command is intact. Used by the ``docs`` CI
+job and, in ``--no-exec`` form, by ``tests/test_docs.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOCS = ("docs/tutorial.md", "README.md")
+
+_FENCE = re.compile(r"```bash\n(.*?)```", re.S)
+
+
+def extract_commands(md_text: str) -> list[str]:
+    """Command lines from every ```bash fence: continuations joined,
+    comments and blank lines dropped."""
+    cmds: list[str] = []
+    for block in _FENCE.findall(md_text):
+        logical = ""
+        for raw in block.splitlines():
+            line = raw.rstrip()
+            if line.endswith("\\"):
+                logical += line[:-1] + " "
+                continue
+            logical += line
+            logical = logical.strip()
+            if logical and not logical.startswith("#"):
+                cmds.append(logical)
+            logical = ""
+    return cmds
+
+
+def resolve_target(cmd: str) -> tuple[str | None, bool]:
+    """(repo-relative path of the python script the command runs, or None
+    for external/non-python commands; whether it is run via ``-m``)."""
+    toks = cmd.split()
+    # strip leading VAR=value environment assignments
+    while toks and re.fullmatch(r"[A-Za-z_][A-Za-z0-9_]*=\S*", toks[0]):
+        toks.pop(0)
+    if not toks or not re.fullmatch(r"python[0-9.]*", toks[0]):
+        return None, False
+    args = [t for t in toks[1:] if not t.startswith("-")] or [""]
+    if "-m" in toks:
+        mod = toks[toks.index("-m") + 1]
+        path = mod.replace(".", "/") + ".py"
+        return (path, True) if os.path.exists(os.path.join(REPO, path)) \
+            else (None, True)      # external module (pytest, pip, ...)
+    if args[0].endswith(".py"):
+        return args[0], False
+    return None, False
+
+
+def is_argparse_cli(path: str) -> bool:
+    with open(os.path.join(REPO, path)) as f:
+        return "argparse" in f.read()
+
+
+def check(docs: tuple[str, ...] = DOCS, run_help: bool = True,
+          verbose: bool = True) -> list[str]:
+    """Return a list of failure descriptions (empty = all good)."""
+    failures: list[str] = []
+    env = dict(os.environ,
+               PYTHONPATH="src" + os.pathsep + os.environ.get(
+                   "PYTHONPATH", ""))
+    for doc in docs:
+        doc_path = os.path.join(REPO, doc)
+        if not os.path.exists(doc_path):
+            failures.append(f"{doc}: missing")
+            continue
+        with open(doc_path) as f:
+            cmds = extract_commands(f.read())
+        if verbose:
+            print(f"[{doc}] {len(cmds)} documented commands")
+        for cmd in cmds:
+            target, via_m = resolve_target(cmd)
+            if target is None:
+                if verbose:
+                    print(f"  skip (external): {cmd}")
+                continue
+            full = os.path.join(REPO, target)
+            if not os.path.exists(full):
+                failures.append(f"{doc}: `{cmd}` -> {target} does not exist")
+                continue
+            try:
+                with open(full) as src:
+                    ast.parse(src.read(), filename=target)
+            except SyntaxError as e:
+                failures.append(f"{doc}: {target} does not parse: {e}")
+                continue
+            if run_help and is_argparse_cli(target):
+                argv = [sys.executable] + \
+                    (["-m", target[:-3].replace("/", ".")] if via_m
+                     else [full]) + ["--help"]
+                r = subprocess.run(argv, cwd=REPO, env=env,
+                                   capture_output=True, timeout=120)
+                if r.returncode != 0:
+                    failures.append(
+                        f"{doc}: `{' '.join(argv[1:])}` exited "
+                        f"{r.returncode}: {r.stderr.decode()[-300:]}")
+                elif verbose:
+                    print(f"  ok (--help): {cmd}")
+            elif verbose:
+                print(f"  ok (compiles): {cmd}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-exec", action="store_true",
+                    help="skip the --help subprocess runs (existence + "
+                         "compile checks only)")
+    args = ap.parse_args(argv)
+    failures = check(run_help=not args.no_exec)
+    for f in failures:
+        print(f"FAIL: {f}", file=sys.stderr)
+    print(f"{'OK' if not failures else 'BROKEN'}: "
+          f"{len(failures)} failures across {len(DOCS)} docs")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

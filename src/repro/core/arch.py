@@ -162,21 +162,28 @@ def default_arch(
     gbuf_bus_bits: int = 256,
     lbuf_bus_bits: int = 128,
     dram_bus_bits: int = 64,
+    double_buffered: bool = True,
     name: str = "miredo-tab4",
 ) -> CimArch:
-    """The paper's Table IV configuration (defaults) with sweepable knobs."""
+    """The paper's Table IV configuration (defaults) with sweepable knobs.
+
+    ``double_buffered=False`` is the single-buffer-only policy point of the
+    co-design space (`core/dse.py`): no on-chip level may double-buffer, so
+    every transfer serializes with compute (psi^DM forced to 0)."""
     levels = (
         MemLevel("DRAM", None, dram_bus_bits, OPERANDS, shared=True,
                  bypassable=False, double_bufferable=False,
                  access_energy_pj_per_byte=160.0),
         MemLevel("GBuf", int(gbuf_kb * 1024), gbuf_bus_bits, OPERANDS,
-                 shared=True, bypassable=True, double_bufferable=True,
+                 shared=True, bypassable=True,
+                 double_bufferable=double_buffered,
                  access_energy_pj_per_byte=6.0),
         MemLevel("LBuf", int(lbuf_kb * 1024), lbuf_bus_bits, OPERANDS,
-                 shared=True, bypassable=True, double_bufferable=True,
+                 shared=True, bypassable=True,
+                 double_bufferable=double_buffered,
                  access_energy_pj_per_byte=2.0),
         MemLevel("Reg", reg_bytes, lbuf_bus_bits, OPERANDS, shared=False,
-                 bypassable=True, double_bufferable=True,
+                 bypassable=True, double_bufferable=double_buffered,
                  access_energy_pj_per_byte=0.6),
         MemLevel("Macro", macro_rows * macro_cols, lbuf_bus_bits, (WEIGHT,),
                  shared=False, bypassable=False, double_bufferable=False,
@@ -208,3 +215,56 @@ def sweep_arch(**kw) -> CimArch:
 def max_spatial_macs(arch: CimArch) -> int:
     """Peak MACs per cycle-group: product of all spatial axis sizes."""
     return math.prod(ax.size for ax in arch.spatial)
+
+
+# ---------------------------------------------------------------------------
+# Co-design support: area proxy + structural serde (DESIGN.md §Co-design DSE)
+# ---------------------------------------------------------------------------
+
+#: Bits per CIM crossbar cell (INT8 weights, one weight per cell column
+#: group — the paper's precision setup).
+CELL_BITS = 8
+
+
+def n_macros(arch: CimArch) -> int:
+    """Number of physical CIM macro arrays: product of the spatial axes that
+    replicate the macro level (``replicates_from`` at or above it). Wordline/
+    bitline lanes live *inside* one macro and do not multiply the count."""
+    return math.prod(
+        ax.size for ax in arch.spatial
+        if ax.replicates_from is not None
+        and ax.replicates_from <= arch.macro_level)
+
+
+def area_proxy(arch: CimArch) -> int:
+    """Silicon-cost proxy for the Pareto frontier (`core/dse.py`):
+    macros x crossbar bits = n_macros x macro_rows x macro_cols x CELL_BITS.
+
+    CIM die area is dominated by the macro arrays (cell mats + per-bitline
+    ADCs scale with rows x cols x macro count); SRAM buffer capacity is
+    deliberately *not* counted, so along the buffer-capacity knobs the DSE
+    answers "how much buffer does this macro budget need" rather than
+    trading buffers against macros — a documented simplification."""
+    return n_macros(arch) * arch.macro_rows * arch.macro_cols * CELL_BITS
+
+
+def arch_fingerprint(arch: CimArch) -> str:
+    """Canonical *structural* serialization for cache keys (`core/cache.py`
+    digests this). Covers every field that can change a solve result:
+    per-level capacity/bus/serves/shared/bypassable/double-bufferable and
+    access energy, spatial axes, macro geometry and timing/energy constants.
+    Excludes ``name`` (two structurally identical archs must share cache
+    entries — the DSE grid generates archs by knobs, not by name) and
+    ``freq_ghz`` (cycles and pJ are frequency-independent)."""
+    parts = []
+    for lv in arch.levels:
+        parts.append(
+            f"{lv.name}:{lv.capacity_bytes}:{lv.bus_bits}:"
+            f"{','.join(lv.serves)}:{int(lv.shared)}:{int(lv.bypassable)}:"
+            f"{int(lv.double_bufferable)}:{lv.access_energy_pj_per_byte!r}")
+    for ax in arch.spatial:
+        parts.append(f"{ax.name}:{ax.size}:{','.join(ax.dims)}:"
+                     f"{ax.at_level}:{ax.replicates_from}")
+    parts.append(f"{arch.macro_rows}x{arch.macro_cols}:{arch.l_mvm_cycles}:"
+                 f"{arch.mode_switch_cycles}:{arch.mac_energy_pj!r}")
+    return "|".join(parts)

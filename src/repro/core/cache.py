@@ -9,8 +9,9 @@ Cache keys cover the *complete* solve identity:
   * the layer structure (all loop bounds + stride — not the name, so
     structurally identical layers share entries; this same key is the
     network pipeline's dedup key),
-  * the full architecture description (hierarchy capacities/buses/serves,
-    spatial axes, timing constants),
+  * the full architecture *structure* (hierarchy capacities/buses/serves/
+    bypass/buffering flags, access energies, spatial axes, macro geometry,
+    timing constants — but not the arch name; `arch.arch_fingerprint`),
   * every ``FormulationConfig`` field that can change the result (the seed's
     key omitted ``mu1``/``mu2_frac``/``latency_slack``/``mip_rel_gap``/
     ``combo_cap`` and silently served stale mappings when objective weights
@@ -26,10 +27,16 @@ import os
 import time
 
 from repro.core import workload as wl
-from repro.core.arch import CimArch
+from repro.core.arch import CimArch, arch_fingerprint
 from repro.core.mapping import Mapping
 
-CACHE_VERSION = 2   # v2: key covers all FormulationConfig fields
+# v2: key covers all FormulationConfig fields.
+# v3: arch key is structural (`arch.arch_fingerprint`): it now covers
+#     per-level `bypassable` and access energies (the v2 key ignored both,
+#     so archs differing only in energy constants shared stale records) and
+#     drops the arch *name*, so the DSE grid's generated archs hit the same
+#     entries as an identically-shaped hand-built arch.
+CACHE_VERSION = 3
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -80,17 +87,11 @@ def _digest(s: str) -> str:
 
 
 def arch_cache_key(arch: CimArch) -> str:
-    parts = [arch.name]
-    for lv in arch.levels:
-        parts.append(f"{lv.name}:{lv.capacity_bytes}:{lv.bus_bits}:"
-                     f"{','.join(lv.serves)}:{int(lv.shared)}:"
-                     f"{int(lv.double_bufferable)}")
-    for ax in arch.spatial:
-        parts.append(f"{ax.name}:{ax.size}:{','.join(ax.dims)}:"
-                     f"{ax.at_level}:{ax.replicates_from}")
-    parts.append(f"{arch.l_mvm_cycles}:{arch.mode_switch_cycles}:"
-                 f"{arch.mac_energy_pj}")
-    return _digest("|".join(parts))
+    """Structural arch key: digests ``arch.arch_fingerprint`` — the name is
+    *not* part of the identity, so two archs differing only in LBuf capacity
+    (or any other knob) get distinct keys while renamed-but-identical archs
+    share entries (the DSE grid relies on both properties)."""
+    return _digest(arch_fingerprint(arch))
 
 
 def layer_cache_key(layer: wl.Layer) -> str:

@@ -298,3 +298,35 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
         cache_hits=cache_hits, budgets=budgets,
         wall_s=round(time.monotonic() - t0, 2),
         totals=_aggregate(out_layers))
+
+
+def optimize_over_archs(layers: Sequence[wl.Layer],
+                        archs: Sequence[CimArch],
+                        mode: str = "miredo", *,
+                        counts: Sequence[int] | None = None,
+                        cache: ResultCache | None = None,
+                        use_cache: bool = True,
+                        verbose: bool = False,
+                        **net_kwargs) -> dict[str, NetworkResult]:
+    """Batch-over-archs entry point (the co-design DSE's full-fidelity pass,
+    `core/dse.py`): run ``optimize_network`` for the same workload under
+    every architecture, sharing ONE ``ResultCache`` across all of them.
+
+    Cache keys are arch-aware (`cache.arch_cache_key` digests the structural
+    `arch.arch_fingerprint`), so per-arch records never collide, reruns of a
+    sweep are incremental, and a grid point that equals a previously solved
+    arch — under any name — is free. Returns ``{arch.name: NetworkResult}``
+    in input order; arch names must be unique."""
+    archs = list(archs)
+    names = [a.name for a in archs]
+    assert len(set(names)) == len(names), f"duplicate arch names: {names}"
+    cache = cache if cache is not None else (
+        ResultCache() if use_cache else None)
+    out: dict[str, NetworkResult] = {}
+    for arch in archs:
+        if verbose:
+            print(f"[over-archs/{mode}] {arch.name}", flush=True)
+        out[arch.name] = optimize_network(
+            layers, arch, mode, counts=counts, cache=cache,
+            use_cache=use_cache, verbose=verbose, **net_kwargs)
+    return out

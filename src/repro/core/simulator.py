@@ -18,6 +18,13 @@ Simulates the mapped loop nest iteration-by-iteration with explicit:
 
 This is an independent implementation sharing only the tile-geometry helpers
 with latency.py, so agreement between the two is meaningful evidence.
+
+Call path: the optimizers and the network pipeline score mappings with the
+analytical model (`latency.evaluate` via `energy.evaluate_edp` — DESIGN.md
+§Network pipeline); the simulator is the *out-of-band* cross-check, driven
+by `benchmarks/fig4a_model_accuracy.py` (accuracy over sampled mappings)
+and `examples/quickstart.py` (single-layer sanity check). It never sits on
+the solve path.
 """
 
 from __future__ import annotations

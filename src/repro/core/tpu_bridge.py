@@ -1,6 +1,6 @@
 """MIREDO -> TPU bridge: the paper's MIP machinery re-instantiated over the
 TPU memory hierarchy (HBM -> VMEM -> MXU) to select Pallas kernel block
-shapes (DESIGN.md §3).
+shapes (DESIGN.md §TPU bridge).
 
 The CIM concepts map one-to-one:
   * eq. (9)  capacity with (1 + psi^DM):  Pallas pipelining double-buffers
@@ -15,9 +15,13 @@ The CIM concepts map one-to-one:
     step along the reduction axis; re-fetch traffic is modeled in the HBM
     term exactly like MIREDO models macro reloads.
 
-The resulting MIP is tiny (tens of binaries) and solves in milliseconds;
-``select_matmul_blocks`` feeds kernels/matmul_int8, ``select_flash_blocks``
-feeds kernels/flash_attention.
+The resulting MIP is tiny (tens of binaries) and solves in milliseconds —
+it is deliberately *not* routed through the network pipeline or its solve
+cache (those key on `workload.Layer` x `CimArch`; a block-shape pick is
+neither). Call paths today: ``select_matmul_blocks`` feeds
+kernels/matmul_int8 (ops zero-pad operands when a padded block comes
+back), ``select_flash_blocks`` feeds kernels/flash_attention, and
+``benchmarks/tpu_bridge_bench.py`` sweeps both for the report.
 """
 
 from __future__ import annotations

@@ -1,6 +1,6 @@
 """INT8 quantized matmul Pallas kernel — the CIM MVM primitive, TPU-native.
 
-CIM -> TPU adaptation (DESIGN.md §3): the CIM macro holds an INT8 weight
+CIM -> TPU adaptation (DESIGN.md §TPU bridge): the CIM macro holds an INT8 weight
 tile and streams bit-serial inputs; on TPU the analogous structure is an
 MXU-aligned weight block resident in VMEM while activation blocks stream
 HBM->VMEM through Pallas' pipelined (double-buffered) BlockSpecs — the same

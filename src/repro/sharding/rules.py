@@ -8,7 +8,7 @@ Mesh axes:
            batch (and long-sequence) dimension of activations
   model  — TP: attention heads / FFN hidden / vocab; EP: MoE experts
 
-Strategy per tensor class (see DESIGN.md §5):
+Strategy per tensor class (see DESIGN.md §Sharding rules):
   * dense kernels (d_in, d_out): P("data", "model") — FSDP x TP
   * attention projections: TP over heads when divisible, else fully-FSDP
     (P(("data","model"), None)) with replicated attention compute

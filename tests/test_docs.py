@@ -1,0 +1,58 @@
+"""Docs can't rot silently: every command documented in docs/tutorial.md
+and README.md must resolve to a real, parseable repo script
+(docs/check_docs.py provides the checker; CI's ``docs`` job additionally
+runs each argparse CLI with ``--help``)."""
+
+import importlib.util
+import os
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_spec = importlib.util.spec_from_file_location(
+    "check_docs", os.path.join(REPO, "docs", "check_docs.py"))
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_extract_commands_from_bash_fences():
+    md = ("intro\n"
+          "```bash\n"
+          "# a comment\n"
+          "PYTHONPATH=src python x.py \\\n"
+          "  --flag value\n"
+          "\n"
+          "python -m benchmarks.run --quick\n"
+          "```\n"
+          "```python\nprint('not a command')\n```\n")
+    cmds = check_docs.extract_commands(md)
+    assert len(cmds) == 2
+    assert cmds[0].split() == ["PYTHONPATH=src", "python", "x.py",
+                               "--flag", "value"]
+    assert cmds[1] == "python -m benchmarks.run --quick"
+
+
+def test_resolve_target_classification():
+    rt = check_docs.resolve_target
+    assert rt("PYTHONPATH=src python -m benchmarks.run --quick") == \
+        ("benchmarks/run.py", True)
+    assert rt("python examples/quickstart.py") == \
+        ("examples/quickstart.py", False)
+    assert rt("A=1 B=2 python benchmarks/dse_pareto.py --reduced") == \
+        ("benchmarks/dse_pareto.py", False)
+    # external tools are skipped, not failed
+    assert rt("PYTHONPATH=src python -m pytest -x -q") == (None, True)
+    assert rt("pip install numpy") == (None, False)
+    assert rt("ls reports/") == (None, False)
+
+
+def test_every_documented_command_resolves_and_parses():
+    failures = check_docs.check(run_help=False, verbose=False)
+    assert failures == [], "\n".join(failures)
+
+
+def test_readme_links_the_docs():
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for doc in ("docs/tutorial.md", "docs/api.md"):
+        assert doc in readme, f"README must link {doc}"
+        assert os.path.exists(os.path.join(REPO, doc))

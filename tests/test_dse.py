@@ -1,0 +1,202 @@
+"""Co-design DSE (core/dse.py): Pareto dominance, screening safety
+(never prunes the exhaustive-MIP frontier), area proxy, arch-aware cache
+keys, and the end-to-end result structure."""
+
+from repro.core.arch import (arch_fingerprint, area_proxy, default_arch,
+                             n_macros)
+from repro.core.cache import ResultCache, arch_cache_key, solve_record_key
+from repro.core.dse import (ArchSpace, DsePoint, _screen_subset, dominates,
+                            pareto_frontier, run_dse, screen_arch,
+                            screen_prune)
+from repro.core.formulation import FormulationConfig
+from repro.core.workload import gemm
+
+TINY = gemm("tiny", 32, 64, 64)
+
+
+# ---------------------------------------------------------------------------
+# Pareto dominance on a hand-built 3-point frontier
+# ---------------------------------------------------------------------------
+
+def test_pareto_dominance_three_point_frontier():
+    a = DsePoint("a", cycles=10, energy_pj=10, area_bits=100)
+    b = DsePoint("b", cycles=5, energy_pj=20, area_bits=200)
+    c = DsePoint("c", cycles=20, energy_pj=5, area_bits=300)
+    d = DsePoint("d", cycles=11, energy_pj=11, area_bits=100)  # dom. by a
+    e = DsePoint("e", cycles=10, energy_pj=10, area_bits=100)  # ties a
+    assert dominates(a, d) and not dominates(d, a)
+    assert not dominates(a, a)                   # never self-dominates
+    assert not dominates(a, b) and not dominates(b, a)   # trade-off
+    assert not dominates(a, c) and not dominates(c, a)
+    front = pareto_frontier([a, b, c, d, e])
+    assert [p.arch_name for p in front] == ["a", "b", "c"]
+    assert pareto_frontier([]) == []
+    assert [p.arch_name for p in pareto_frontier([d])] == ["d"]
+
+
+def test_dominance_requires_all_objectives():
+    # better latency+energy but LARGER area never dominates
+    small = DsePoint("small", cycles=100, energy_pj=100, area_bits=10)
+    big = DsePoint("big", cycles=1, energy_pj=1, area_bits=20)
+    assert not dominates(big, small)
+    assert {p.arch_name for p in pareto_frontier([small, big])} == \
+        {"small", "big"}
+
+
+# ---------------------------------------------------------------------------
+# Screening prune rules
+# ---------------------------------------------------------------------------
+
+def test_screen_prune_decisive_dominance_only():
+    pts = [DsePoint("good", 100, 100, 10, "screen"),
+           DsePoint("bad", 200, 200, 10, "screen"),      # 2x worse: pruned
+           DsePoint("close", 110, 110, 10, "screen"),    # within slack: kept
+           DsePoint("trade", 50, 1000, 10, "screen"),    # latency win: kept
+           DsePoint("bigfast", 10, 10, 20, "screen")]    # larger area:
+    keep, drop = screen_prune(pts, slack=0.25)           # prunes nobody
+    assert {p.arch_name for p in drop} == {"bad"}
+    assert {p.arch_name for p in keep} == \
+        {"good", "close", "trade", "bigfast"}
+
+
+def test_screen_prune_collapses_exact_ties_to_most_capable():
+    archs = {"small": default_arch(gbuf_kb=2.0, name="small"),
+             "big": default_arch(gbuf_kb=8.0, name="big")}
+    tie = [DsePoint("small", 10, 10, 5, "screen"),
+           DsePoint("big", 10, 10, 5, "screen")]
+    keep, drop = screen_prune(tie, archs=archs)
+    assert [p.arch_name for p in keep] == ["big"]        # more capability
+    keep2, _ = screen_prune(tie)                         # no archs: first
+    assert [p.arch_name for p in keep2] == ["small"]
+
+
+# ---------------------------------------------------------------------------
+# Area proxy + arch space
+# ---------------------------------------------------------------------------
+
+def test_area_proxy_counts_macros_not_buffers():
+    base = default_arch()
+    assert n_macros(base) == 8                           # one macro per core
+    assert area_proxy(base) == 8 * 128 * 32 * 8          # x CELL_BITS
+    assert area_proxy(default_arch(lbuf_kb=1024.0)) == area_proxy(base)
+    assert area_proxy(default_arch(gbuf_kb=64.0)) == area_proxy(base)
+    assert area_proxy(default_arch(n_cores=16)) == 2 * area_proxy(base)
+    assert area_proxy(default_arch(macro_rows=256)) == 2 * area_proxy(base)
+
+
+def test_arch_space_enumerates_unique_validated_archs():
+    sp = ArchSpace(macro=((64, 32), (128, 32)), n_cores=(2, 4),
+                   lbuf_kb=(16.0,), double_buffered=(True, False))
+    archs = sp.enumerate()
+    assert sp.size == len(archs) == 8
+    assert len({a.name for a in archs}) == 8
+    assert len({arch_fingerprint(a) for a in archs}) == 8
+    db_off = [a for a in archs if a.name.endswith("-sb")]
+    assert db_off and all(not a.level(2).double_bufferable for a in db_off)
+
+
+# ---------------------------------------------------------------------------
+# Arch-aware cache keys
+# ---------------------------------------------------------------------------
+
+def test_arch_cache_key_separates_lbuf_capacity():
+    """Two archs differing ONLY in LBuf capacity must not share cache
+    entries — a stale-mapping hazard for the DSE sweep."""
+    a = default_arch(lbuf_kb=256.0)
+    b = default_arch(lbuf_kb=16.0)
+    assert arch_cache_key(a) != arch_cache_key(b)
+    cfg = FormulationConfig()
+    assert solve_record_key("miredo", TINY, a, cfg) != \
+        solve_record_key("miredo", TINY, b, cfg)
+
+
+def test_arch_cache_key_is_structural():
+    # renames don't separate...
+    assert arch_cache_key(default_arch(name="x")) == \
+        arch_cache_key(default_arch(name="y"))
+    # ...every real knob does
+    base = default_arch()
+    for kw in (dict(n_cores=4), dict(macro_rows=64), dict(macro_cols=64),
+               dict(gbuf_kb=2.0), dict(gbuf_bus_bits=128),
+               dict(dram_bus_bits=128), dict(reg_bytes=1024),
+               dict(double_buffered=False)):
+        assert arch_cache_key(default_arch(**kw)) != arch_cache_key(base), kw
+
+
+# ---------------------------------------------------------------------------
+# Screening subset + screen_arch
+# ---------------------------------------------------------------------------
+
+def test_screen_subset_covers_heavy_layers():
+    big = gemm("big", 512, 512, 512)
+    mid = gemm("mid", 128, 128, 128)
+    tiny = gemm("t", 4, 4, 4)
+    sub = _screen_subset([big, mid, tiny, big], [1, 1, 1, 3])
+    names = [l.name for l, _ in sub]
+    assert names[0] == "big"                     # heaviest first
+    mult = dict((l.name, c) for l, c in sub)
+    assert mult["big"] == 4                      # multiplicity pooled
+    # tiny layer is below the coverage cut
+    assert "t" not in names
+
+
+def test_screen_arch_returns_screen_fidelity_point():
+    arch = default_arch()
+    sub = _screen_subset([TINY], [2])
+    p = screen_arch(sub, arch, samples=8)
+    assert p.fidelity == "screen" and p.arch_name == arch.name
+    assert p.cycles > 0 and p.energy_pj > 0
+    assert p.area_bits == area_proxy(arch)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: structure (cheap mode) + MIP screening guarantee
+# ---------------------------------------------------------------------------
+
+def test_run_dse_greedy_end_to_end():
+    layers = [gemm("a", 32, 64, 64), gemm("b", 128, 2048, 64)]
+    space = ArchSpace(macro=((64, 32), (128, 32)), n_cores=(2,),
+                      lbuf_kb=(256.0, 2.0), prefix="t")
+    res = run_dse(layers, [2, 1], space, "greedy", screen_samples=8,
+                  use_cache=False, workers=1)
+    assert set(res.archs) == {a.name for a in space.enumerate()}
+    assert set(res.screen_points) == set(res.archs)      # whole grid scored
+    assert set(res.points) == set(res.survivors)         # MIP pass survivors
+    assert set(res.survivors) | set(res.pruned) == set(res.archs)
+    assert res.frontier                                  # non-empty
+    areas = [p.area_bits for p in res.frontier]
+    assert areas == sorted(areas)                        # ascending area
+    assert all(p.fidelity == "mip" for p in res.frontier)
+    assert set(res.validation) == {p.arch_name for p in res.frontier}
+    assert all(errs == [] for errs in res.validation.values())
+    best = res.best_under_area(min(areas))
+    assert best is not None and best.area_bits == min(areas)
+    assert res.best_under_area(0) is None
+
+
+def test_screening_never_prunes_the_mip_frontier(tmp_path):
+    """The multi-fidelity guarantee, pinned against exhaustive MIP on a
+    tiny grid: every arch on the exhaustive frontier survives screening,
+    while >= 50% of the grid is pruned. The shared cache makes the second
+    run reuse the first run's solves, so the comparison is exact."""
+    layers = [gemm("ffn", 64, 256, 128), gemm("proj", 32, 64, 64),
+              gemm("head", 128, 2048, 64)]
+    counts = [4, 2, 1]
+    space = ArchSpace(macro=((64, 32), (128, 32)), n_cores=(2,),
+                      lbuf_kb=(256.0, 2.0), prefix="t")
+    cache = ResultCache(str(tmp_path))
+    ex = run_dse(layers, counts, space, "miredo", screen=False,
+                 per_layer_cap_s=2.0, cache=cache)
+    assert len(ex.points) == 4 and not ex.pruned
+    sc = run_dse(layers, counts, space, "miredo", screen=True,
+                 per_layer_cap_s=2.0, cache=cache)
+    assert sc.prune_fraction >= 0.5
+    front = {p.arch_name for p in ex.frontier}
+    assert front <= set(sc.survivors), \
+        f"screening dropped frontier archs: {front - set(sc.survivors)}"
+    # identical solves (cache) => identical frontier on the survivors
+    assert [p.arch_name for p in sc.frontier] == \
+        [p.arch_name for p in ex.frontier]
+    for name in front:
+        assert sc.points[name] == ex.points[name]
+    assert all(errs == [] for errs in sc.validation.values())
