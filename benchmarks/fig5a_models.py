@@ -36,8 +36,13 @@ def run(budget_s: float = 45.0, quick: bool = False) -> dict:
     arch = default_arch()
     models = model_workloads(quick)
     pooled = [layer for layers in models.values() for layer in layers]
+    # schedule=False: this figure reads per-layer EDP only, and the pooled
+    # stream spans independent models the scheduler must not pipeline
+    # across (benchmarks/lm_models.py shows the schedule_boundaries
+    # alternative when the scheduled number is wanted)
     nets = {mode: optimize_network(pooled, arch, mode,
-                                   per_layer_cap_s=budget_s)
+                                   per_layer_cap_s=budget_s,
+                                   schedule=False)
             for mode in ("miredo", "heuristic")}
 
     rows, ratios = [], {}

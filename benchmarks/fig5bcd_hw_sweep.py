@@ -48,8 +48,10 @@ def run(budget_s: float = 45.0, quick: bool = False) -> dict:
     for sweep, variants in SWEEPS.items():
         for tag, kw in variants:
             arch = default_arch(name=f"{sweep}-{tag}", **kw)
+            # schedule=False: the sweep compares serial-sum EDP ratios only
             nets = {mode: optimize_network(layers, arch, mode,
-                                           per_layer_cap_s=budget_s)
+                                           per_layer_cap_s=budget_s,
+                                           schedule=False)
                     for mode in ("miredo", "heuristic")}
             edp_m = nets["miredo"].totals["edp"]
             edp_h = nets["heuristic"].totals["edp"]

@@ -55,6 +55,12 @@ def run(budget_s: float = 45.0, quick: bool = False,
             works.append((aid, work))
     pooled = [l for _, w in works for l in w.layers]
     counts = [c for _, w in works for c in w.counts]
+    # each (model, scenario) is an independent stream: the scheduler must
+    # not pipeline across pooled-workload boundaries
+    bounds, off = [], 0
+    for _, w in works:
+        bounds.append(off)
+        off += len(w)
     n_unique = len(dedup_layers(pooled)[0])
     print(f"[frontend] {len(works)} (model, scenario) workloads -> "
           f"{len(pooled)} extracted layers, {n_unique} unique solves "
@@ -64,6 +70,7 @@ def run(budget_s: float = 45.0, quick: bool = False,
     total = QUICK_AVG_S * n_unique if quick else None
     nets = {m: optimize_network(pooled, arch, m, counts=counts,
                                 per_layer_cap_s=cap, total_budget_s=total,
+                                schedule_boundaries=bounds,
                                 workers=workers)
             for m in modes}
 

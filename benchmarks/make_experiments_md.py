@@ -82,6 +82,23 @@ def bench_section() -> str:
         out.append("**TPU bridge (beyond paper):** MIP-selected Pallas "
                    "blocks per arch in `reports/benchmarks/tpu_bridge.json`"
                    f"; flash blocks @32k = {tb['flash_blocks_32k']}.")
+    sched = load("sched_lm")
+    if sched:
+        lines = [
+            f"**Network scheduler (beyond paper)** — serial-sum vs "
+            f"weight-resident pipelined schedule, mode `{sched['mode']}`: "
+            f"{sched['n_packed_rows']}/{len(sched['rows'])} (model, "
+            f"scenario) rows packed >=1 segment; network-mode simulator "
+            f"agreement {sched['mean_sim_accuracy']:.3f}.", "",
+            "| model | scenario | segments | packed | serial cyc | "
+            "sched cyc | speedup |",
+            "|---|---|---|---|---|---|---|"]
+        for r in sched["rows"]:
+            lines.append(
+                f"| {r['model']} | {r['scenario']} | {r['n_segments']} | "
+                f"{r['n_packed']} | {r['serial_cycles']:.4g} | "
+                f"{r['scheduled_cycles']:.4g} | {r['speedup']:.3f}x |")
+        out.append("\n".join(lines))
     dse = load("dse_pareto")
     if dse:
         lines = [

@@ -2,10 +2,11 @@
 
 One benchmark per paper table/figure, plus the beyond-paper jobs: the TPU
 bridge, the ``lm`` job (the whole LM model zoo lowered through the model
-frontend, ``benchmarks/lm_models.py``) and the ``dse`` job (hardware/
-dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``).
-``--quick`` trims solve budgets; results cache under reports/cache so
-reruns are incremental.
+frontend, ``benchmarks/lm_models.py``), the ``dse`` job (hardware/
+dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``) and the
+``sched`` job (serial-sum vs multi-core-scheduled end-to-end latency,
+``benchmarks/sched_lm.py``). ``--quick`` trims solve budgets; results
+cache under reports/cache so reruns are incremental.
 """
 
 from __future__ import annotations
@@ -20,7 +21,7 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm,dse")
+                         "flexfact,bridge,lm,dse,sched")
     args = ap.parse_args(argv)
     budget = 20.0 if args.quick else 60.0
     only = set(args.only.split(",")) if args.only else None
@@ -28,7 +29,7 @@ def main(argv=None):
     from benchmarks import (dse_pareto, fig4a_model_accuracy,
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
-                            tab_flexfact, tpu_bridge_bench)
+                            sched_lm, tab_flexfact, tpu_bridge_bench)
 
     jobs = [
         ("fig4a", lambda: fig4a_model_accuracy.run(
@@ -43,6 +44,8 @@ def main(argv=None):
         ("bridge", tpu_bridge_bench.run),
         ("lm", lambda: lm_models.run(budget_s=budget, quick=args.quick)),
         ("dse", lambda: dse_pareto.run(budget_s=budget, quick=args.quick,
+                                       reduced=args.quick)),
+        ("sched", lambda: sched_lm.run(budget_s=budget, quick=args.quick,
                                        reduced=args.quick)),
     ]
     failures = []

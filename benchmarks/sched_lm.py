@@ -1,0 +1,162 @@
+"""Serial-sum vs multi-core-scheduled end-to-end latency across the LM zoo
+(`core/scheduler.py`, DESIGN.md §Network scheduler).
+
+Unlike ``benchmarks/lm_models.py`` — which pools every (model, scenario)
+workload into ONE network-pipeline call because per-layer EDP is pooling-
+invariant — a *schedule* is a property of one model's ordered layer
+stream, so each (model, scenario) pair runs its own ``optimize_network``
+call. The shared on-disk cache still dedups the underlying solves across
+rows (reduced configs share most GEMM shapes), and every row reports the
+serial baseline, the scheduled end-to-end latency, the segment/packing
+breakdown and the network-mode event-simulator agreement.
+
+Registered as the ``sched`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python -m benchmarks.sched_lm --reduced
+    PYTHONPATH=src python -m benchmarks.sched_lm \\
+        --archs minicpm-2b,glm4-9b --reduced --scenarios decode_32k
+
+``--reduced`` is the CI acceptance path (sched-smoke): every row with a
+packed segment must strictly beat its serial baseline, no row may ever be
+worse than it, at least one row must pack, and the simulator must agree
+with the analytical schedule model within the same tolerance the tier-1
+suite enforces for single layers (Fig. 4(a) discipline,
+``tests/test_latency_model.py::test_simulator_agreement``).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import md_table, write_report
+from repro.configs import ARCH_IDS, get_config
+from repro.core.arch import default_arch
+from repro.core.frontend import extract_all
+from repro.core.network import optimize_network
+from repro.core.scheduler import cross_check
+
+#: Scenario subset for ``--quick`` / ``--reduced`` runs.
+QUICK_SCENARIOS = ("prefill_32k", "decode_32k")
+#: Quick-mode solver knobs (same spirit as benchmarks/lm_models.py).
+QUICK_CAP_S = 2.0
+QUICK_AVG_S = 1.0
+#: Simulator-agreement gate: mean accuracy over replayed segments — the
+#: same floor the tier-1 Fig. 4(a) agreement test uses for single layers.
+SIM_ACC_FLOOR = 0.8
+
+
+def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
+        archs: tuple[str, ...] | None = None,
+        scenarios: tuple[str, ...] | None = None,
+        mode: str = "miredo",
+        workers: int | None = None) -> dict:
+    quick = quick or reduced
+    arch = default_arch()
+    arch_ids = tuple(archs) if archs else ARCH_IDS
+    scen = tuple(scenarios) if scenarios else (
+        QUICK_SCENARIOS if quick else None)
+
+    works = []
+    for aid in arch_ids:
+        cfg = get_config(aid)
+        if reduced:
+            cfg = cfg.reduced()
+        for work in extract_all(cfg, scen).values():
+            works.append((aid, work))
+
+    rows, table, accs = [], [], []
+    for aid, work in works:
+        cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+        total = QUICK_AVG_S * work.n_unique if quick else None
+        net = optimize_network(list(work.layers), arch, mode,
+                               counts=list(work.counts),
+                               per_layer_cap_s=cap, total_budget_s=total,
+                               workers=workers)
+        s = net.scheduled
+        acc, n_checked = cross_check(net.schedule, arch)
+        if n_checked:
+            accs.append(acc)
+        speedup = s["serial_cycles"] / max(s["cycles"], 1.0)
+        rows.append({
+            "model": aid, "scenario": work.scenario,
+            "layers": len(work), "serial_cycles": s["serial_cycles"],
+            "scheduled_cycles": s["cycles"], "speedup": speedup,
+            "n_segments": int(s["n_segments"]),
+            "n_packed": int(s["n_packed"]),
+            "sim_accuracy": acc if n_checked else None,
+            "sim_segments": n_checked,
+        })
+        table.append([aid, work.scenario, len(work),
+                      int(s["n_segments"]), int(s["n_packed"]),
+                      f"{s['serial_cycles']:.4g}", f"{s['cycles']:.4g}",
+                      f"{speedup:.3f}x",
+                      f"{acc:.3f}" if n_checked else "-"])
+
+    headers = ["model", "scenario", "layers", "segments", "packed",
+               "serial cyc", "sched cyc", "speedup", "sim acc"]
+    print(md_table(headers, table))
+    mean_acc = sum(accs) / len(accs) if accs else 1.0
+    n_packed_rows = sum(r["n_packed"] > 0 for r in rows)
+    print(f"[sched/{mode}] {len(rows)} (model, scenario) rows, "
+          f"{n_packed_rows} with packed segments, mean simulator "
+          f"agreement {mean_acc:.3f} over "
+          f"{sum(r['sim_segments'] for r in rows)} segments")
+
+    payload = {"mode": mode, "rows": rows, "mean_sim_accuracy": mean_acc,
+               "n_packed_rows": n_packed_rows}
+    write_report("sched_lm", payload)
+
+    # --reduced is the CI acceptance path (sched-smoke): enforce the
+    # scheduler's contract instead of warning, so regressions fail the job.
+    if reduced:
+        for r in rows:
+            if r["n_packed"] > 0 and not \
+                    r["scheduled_cycles"] < r["serial_cycles"]:
+                raise RuntimeError(
+                    f"{r['model']}/{r['scenario']}: {r['n_packed']} packed "
+                    f"segments but scheduled {r['scheduled_cycles']} !< "
+                    f"serial {r['serial_cycles']}")
+            if r["scheduled_cycles"] > r["serial_cycles"]:
+                raise RuntimeError(
+                    f"{r['model']}/{r['scenario']}: scheduled worse than "
+                    f"serial ({r['scheduled_cycles']} > "
+                    f"{r['serial_cycles']})")
+        if n_packed_rows == 0:
+            raise RuntimeError("no (model, scenario) row packed a segment "
+                               "(acceptance: scheduling must engage on the "
+                               "reduced zoo)")
+        if accs and mean_acc < SIM_ACC_FLOOR:
+            raise RuntimeError(
+                f"network-mode simulator agreement {mean_acc:.3f} < "
+                f"{SIM_ACC_FLOOR} (Fig. 4(a) tolerance)")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick solver caps (implied by --reduced)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke-test reductions of the LM configs + "
+                         "quick caps + acceptance gates")
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer MIP cap (seconds; quick mode clamps)")
+    ap.add_argument("--archs", default="",
+                    help=f"comma list of arch ids (default: all of "
+                         f"{', '.join(ARCH_IDS)})")
+    ap.add_argument("--scenarios", default="",
+                    help="comma list of ShapeSpec names (default: all "
+                         "applicable; quick: " + ",".join(QUICK_SCENARIOS)
+                         + ")")
+    ap.add_argument("--mode", default="miredo")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
+        archs=tuple(a for a in args.archs.split(",") if a) or None,
+        scenarios=tuple(s for s in args.scenarios.split(",") if s) or None,
+        mode=args.mode, workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -82,7 +82,12 @@ def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0):
     print(f"\nCIM dataflow for {cfg.name} decode (batch={batch}): "
           f"{len(work)} GEMMs, {net.n_unique} unique solves, "
           f"aggregate EDP {net.totals['edp']:.3e} "
-          f"({net.totals['cycles']:.3g} cycles)")
+          f"({net.totals['cycles']:.3g} cycles serial-sum)")
+    s = net.scheduled
+    print(f"multi-core schedule: {s['cycles']:.3g} cycles end-to-end "
+          f"({s['serial_cycles'] / max(s['cycles'], 1.0):.2f}x vs serial, "
+          f"{int(s['n_segments'])} segments, {int(s['n_packed'])} packed "
+          f"weight-resident)")
     top = max(net.layers, key=lambda lr: lr.edp * lr.count)
     mp = top.record["mapping"]
     # GEMM-speak (M x K) @ (K x N): loop-nest N=M, C=K(reduction), K=N

@@ -6,3 +6,4 @@ from repro.core.workload import Layer, conv, gemm
 from repro.core.mapping import Mapping
 from repro.core.frontend import (ModelWorkload, extract_all,
                                  extract_workload, optimize_model)
+from repro.core.scheduler import Schedule, schedule_network

@@ -248,6 +248,32 @@ def area_proxy(arch: CimArch) -> int:
     return n_macros(arch) * arch.macro_rows * arch.macro_cols * CELL_BITS
 
 
+def core_axis(arch: CimArch) -> SpatialAxis | None:
+    """The spatial axis whose lanes replicate the macro level — the unit the
+    network scheduler (`core/scheduler.py`) allocates between pipeline
+    stages. ``None`` when no axis replicates per-lane macros (a single-macro
+    chip: nothing to partition)."""
+    for ax in arch.spatial:
+        if ax.replicates_from is not None and \
+                ax.replicates_from <= arch.macro_level:
+            return ax
+    return None
+
+
+def with_cores(arch: CimArch, n: int) -> CimArch:
+    """Structural variant of ``arch`` with the core axis resized to ``n``
+    lanes (buffers, macro geometry and all other axes unchanged). Used by
+    the scheduler's core-scaling probes: how much slower does a layer get
+    on a ``n``-core slice of the chip?"""
+    ax = core_axis(arch)
+    assert ax is not None and n >= 1, (ax, n)
+    spatial = tuple(
+        dataclasses.replace(a, size=n) if a.name == ax.name else a
+        for a in arch.spatial)
+    return dataclasses.replace(arch, spatial=spatial,
+                               name=f"{arch.name}-c{n}")
+
+
 def arch_fingerprint(arch: CimArch) -> str:
     """Canonical *structural* serialization for cache keys (`core/cache.py`
     digests this). Covers every field that can change a solve result:

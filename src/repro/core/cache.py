@@ -36,7 +36,16 @@ from repro.core.mapping import Mapping
 #     so archs differing only in energy constants shared stale records) and
 #     drops the arch *name*, so the DSE grid's generated archs hit the same
 #     entries as an identically-shaped hand-built arch.
-CACHE_VERSION = 3
+# v4: records feed the network scheduler (`core/scheduler.py`), which
+#     derives weight residency, per-instance weight footprints and resident
+#     latency from the record's mapping + cycles. Those inputs are fully
+#     determined by fields the structural key already covers (all loop
+#     bounds + stride fix the weight tensor; the arch fingerprint fixes the
+#     macro capacity and mode-switch cost — no new key fields needed), but
+#     pre-scheduler v3 entries predate that contract, so the version bump
+#     retires them wholesale rather than letting them serve records the
+#     scheduler was never validated against.
+CACHE_VERSION = 4
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -96,7 +105,10 @@ def arch_cache_key(arch: CimArch) -> str:
 
 def layer_cache_key(layer: wl.Layer) -> str:
     """Structural key: loop bounds + stride, *not* the name — identical
-    shapes share cache entries and dedup to one solve."""
+    shapes share cache entries and dedup to one solve. The bounds also fix
+    every scheduler-relevant derived quantity (the K*C*FY*FX weight
+    footprint `scheduler.weight_bytes` packs against), so the scheduler
+    introduces no additional key fields — only the v4 version bump."""
     dims = ",".join(f"{d}={layer.bound(d)}" for d in wl.DIMS)
     return _digest(f"{dims}|s{layer.stride}")
 

@@ -28,7 +28,12 @@ exploration is **multi-fidelity**:
      existing network pipeline (`network.optimize_over_archs`): structural
      layer dedup, MAC-weighted budgets and process fan-out all apply per
      arch, and ONE shared ``ResultCache`` with arch-aware keys makes sweep
-     reruns incremental.
+     reruns incremental. The latency objective is the **scheduled**
+     end-to-end number (`core/scheduler.py`): weight-resident segment
+     packing and layer-to-core pipelining, so the frontier credits extra
+     cores/macros for the parallelism they enable — the per-layer serial
+     sum (which treats the chip as a per-layer constant) only rides along
+     for reporting (`DsePoint.serial_cycles`).
 
 Every frontier point's mapping set is re-checked with the mapping validator
 (`mapping.validate`) — the frontier is only as good as the feasibility of
@@ -116,13 +121,20 @@ class ArchSpace:
 
 @dataclasses.dataclass(frozen=True)
 class DsePoint:
-    """One arch's position in objective space at one fidelity."""
+    """One arch's position in objective space at one fidelity.
+
+    At MIP fidelity ``cycles`` is the *scheduled* end-to-end latency
+    (`core/scheduler.py`: weight-resident segments, pipelined cores) —
+    extra cores and macros now genuinely help an arch onto the frontier
+    instead of idling in the serial sum, which is kept in
+    ``serial_cycles``. Screening points are incumbent serial sums."""
 
     arch_name: str
     cycles: float
     energy_pj: float
     area_bits: int
     fidelity: str = "mip"            # "screen" | "mip"
+    serial_cycles: float | None = None
 
     @property
     def edp(self) -> float:
@@ -178,7 +190,10 @@ def screen_prune(points: Sequence[DsePoint],
        is required before a point is written off — the MIP typically
        improves the incumbent by far less than ``slack``, which is what the
        never-prunes-the-MIP-optimum regression in ``tests/test_dse.py``
-       checks.
+       checks. Since the full pass ranks by *scheduled* latency the slack
+       must additionally absorb the serial-vs-scheduled gap (observed
+       single-digit % on the zoo; widen ``slack`` for workloads where
+       cross-layer pipelining dominates — a documented limitation).
 
     2. **Exact ties.** Points with *identical* (cycles, energy, area) are
        archs the screening fidelity cannot distinguish — typically a knob
@@ -307,18 +322,24 @@ def run_dse(layers: Sequence[wl.Layer],
             use_cache: bool = True,
             workers: int | None = None,
             validate_frontier: bool = True,
+            schedule_boundaries: Sequence[int] | None = None,
             verbose: bool = False) -> DseResult:
     """Co-explore the architecture grid against one workload.
 
     ``space`` is an ``ArchSpace`` or an explicit arch list; ``counts`` the
-    per-layer network multiplicities (``None`` = all 1). ``screen=False``
+    per-layer network multiplicities (``None`` = all 1);
+    ``schedule_boundaries`` the sub-stream start indices when ``layers``
+    pools several independent workloads (the scheduler must not pipeline
+    across them). ``screen=False``
     skips the pruning pass and runs the MIP on the whole grid (the
     exhaustive reference the screening guarantee is tested against).
     ``total_budget_s`` is the *per-arch* global solver budget forwarded to
     ``optimize_network``; the default derives from ``per_layer_cap_s`` as
     usual. Returns a ``DseResult`` whose ``frontier`` holds the
-    non-dominated (cycles, energy, area) points at MIP fidelity, each with
-    every mapping re-validated when ``validate_frontier`` is on."""
+    non-dominated (scheduled cycles, energy, area) points at MIP fidelity
+    — latency is the multi-core schedule's end-to-end number, not the
+    serial per-layer sum — each with every mapping re-validated when
+    ``validate_frontier`` is on."""
     t0 = time.monotonic()
     layers = list(layers)
     counts = [1] * len(layers) if counts is None else list(counts)
@@ -347,11 +368,22 @@ def run_dse(layers: Sequence[wl.Layer],
     networks = optimize_over_archs(
         layers, [archs[n] for n in survivors], mode, counts=counts,
         cache=cache, use_cache=use_cache, per_layer_cap_s=per_layer_cap_s,
-        total_budget_s=total_budget_s, workers=workers, verbose=verbose)
+        total_budget_s=total_budget_s, workers=workers,
+        schedule_boundaries=schedule_boundaries, verbose=verbose)
+    # MIP-fidelity latency is the *scheduled* end-to-end number: the
+    # network scheduler decides how the arch's cores are actually shared
+    # across layers, so core/macro-rich grid points are credited for the
+    # parallelism they enable rather than scored as if every layer ran
+    # alone (the serial sum rides along for reporting).
     points = {
-        n: DsePoint(arch_name=n, cycles=net.totals["cycles"],
-                    energy_pj=net.totals["energy_pj"],
-                    area_bits=area_proxy(archs[n]), fidelity="mip")
+        n: DsePoint(arch_name=n,
+                    cycles=(net.scheduled or net.totals)["cycles"],
+                    # scheduled energy too: it carries any greedy-basis
+                    # swap delta, so EDP pairs cycles with the energy of
+                    # the mappings the schedule actually executes
+                    energy_pj=(net.scheduled or net.totals)["energy_pj"],
+                    area_bits=area_proxy(archs[n]), fidelity="mip",
+                    serial_cycles=net.totals["cycles"])
         for n, net in networks.items()}
 
     frontier = sorted(pareto_frontier(list(points.values())),

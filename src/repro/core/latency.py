@@ -107,6 +107,40 @@ def _row(operand: str, t: float, dbl: bool, l_i: float, n: float,
     return l_i * c(n - 2) + t + max(t, l_i) + max(t, p_inner)
 
 
+def operand_fill_hops(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                      operand: str) -> list[tuple[bool, float]]:
+    """Per hop of the operand's used-level chain, ``(triggered, cycles)``.
+
+    A hop is *triggered* when some relevant temporal slot at or above its
+    source level re-runs it inside the loop nest (charged by the Table III
+    recursion); untriggered hops are one-time fills charged on top by
+    ``evaluate``. The initial DRAM hop (when level 0 holds no slots for the
+    operand) is by construction never triggered. The weight chain with NO
+    triggered hop is the scheduler's residency condition
+    (`scheduler.weight_residency`), so this is the single source of truth
+    for both accountings."""
+    used = mapping.used_levels(operand)
+    n = mapping.n_slots()
+    hops: list[tuple[bool, float]] = []
+    for m_prev, m_dst in zip(used, used[1:]):
+        triggered = any(
+            wl.is_relevant(mapping.temporal[i][0], operand)
+            and mapping.level_of[operand][i] <= m_prev
+            for i in range(n))
+        chunk = mapping.transfer_bytes(layer, operand, arch, m_prev)
+        t = math.ceil(chunk / mapping.eff_bw_bytes(arch, m_prev))
+        if operand == WEIGHT and m_dst == arch.macro_level:
+            t += arch.mode_switch_cycles
+        hops.append((triggered, float(t)))
+    if used and used[0] != 0:
+        chunk = mapping.transfer_bytes(layer, operand, arch, 0)
+        t = math.ceil(chunk / mapping.eff_bw_bytes(arch, 0))
+        if operand == WEIGHT and used[0] == arch.macro_level:
+            t += arch.mode_switch_cycles
+        hops.append((False, float(t)))
+    return hops
+
+
 def evaluate(mapping: Mapping, layer: wl.Layer,
              arch: CimArch) -> LatencyReport:
     slots = analyze_slots(mapping, layer, arch)
@@ -136,31 +170,15 @@ def evaluate(mapping: Mapping, layer: wl.Layer,
         l_next, n_next, p_next = l_i, float(s.n), p_cur
 
     # One-time fills: operand hops never triggered by any relevant temporal
-    # slot above the destination (fully-stationary tiles loaded once).
+    # slot above the destination (fully-stationary tiles loaded once). The
+    # chain includes the initial DRAM hop when level 0 holds no slots for λ
+    # — charged at B^T_0 (full multicast traffic, source precision),
+    # identical to the MIP's OTC for the DRAM hop.
     one_time = 0.0
     for lam in OPERANDS:
-        used = mapping.used_levels(lam)
-        for m_prev, m_dst in zip(used, used[1:]):
-            triggered = any(
-                wl.is_relevant(slots[i].dim, lam)
-                and slots[i].level[lam] <= m_prev
-                for i in range(n_slots))
-            if not triggered:
-                chunk = mapping.transfer_bytes(layer, lam, arch, m_prev)
-                t = math.ceil(chunk / mapping.eff_bw_bytes(arch, m_prev))
-                if lam == WEIGHT and m_dst == arch.macro_level:
-                    t += arch.mode_switch_cycles
-                one_time += t
-        # Initial fill of the outermost used level from DRAM if DRAM has no
-        # slots for λ: an (always-untriggered) hop 0 -> used[0], charged at
-        # B^T_0 (full multicast traffic, source precision) — identical to
-        # the MIP's OTC for the DRAM hop.
-        if used and used[0] != 0:
-            chunk = mapping.transfer_bytes(layer, lam, arch, 0)
-            t = math.ceil(chunk / mapping.eff_bw_bytes(arch, 0))
-            if lam == WEIGHT and used[0] == arch.macro_level:
-                t += arch.mode_switch_cycles
-            one_time += t
+        one_time += sum(t for triggered, t in
+                        operand_fill_hops(mapping, layer, arch, lam)
+                        if not triggered)
 
     total = max(p_next.values()) + one_time
 

@@ -20,6 +20,13 @@ burn the full cap while tiny ones solve in milliseconds. This module:
 Every MIP solve is warm-started with the greedy/heuristic incumbent inside
 ``optimize_layer`` (upper-bound row + fallback), so a time-capped solve
 always yields a feasible mapping — the pipeline never returns ``None``.
+
+``NetworkResult.totals`` is deliberately the **serial sum**: every layer
+instance owns all cores and pays a full macro weight program-in at its
+boundary. The pipelined end-to-end number — weight-resident segments,
+layer-to-core allocation, reload paid once per segment — is the network
+scheduler's (`core/scheduler.py`, DESIGN.md §Network scheduler) and is
+surfaced as ``NetworkResult.scheduled``.
 """
 
 from __future__ import annotations
@@ -145,7 +152,17 @@ class NetworkResult:
     cache_hits: int
     budgets: dict[str, float]   # structural key -> allocated seconds
     wall_s: float
-    totals: dict[str, float]    # multiplicity-weighted aggregates
+    totals: dict[str, float]    # serial-sum aggregates (see _aggregate)
+    #: Multi-core schedule totals (`core/scheduler.py`): end-to-end cycles
+    #: with weight-resident segments and core-partitioned pipelining —
+    #: keys: cycles, serial_cycles, saved_cycles, n_segments, n_packed,
+    #: energy_delta_pj, energy_pj (the executed mappings': serial records
+    #: plus any pipelined greedy-basis swap deltas) and edp (energy x
+    #: scheduled cycles). ``None`` when scheduling was disabled.
+    scheduled: dict[str, float] | None = None
+    #: The full `scheduler.Schedule` behind ``scheduled`` (segments, core
+    #: allocations, per-stage latencies), for reporting and cross-checks.
+    schedule: object | None = None
 
     def record_of(self, name: str) -> dict:
         for lr in self.layers:
@@ -155,6 +172,11 @@ class NetworkResult:
 
 
 def _aggregate(layers: list[LayerResult]) -> dict[str, float]:
+    """Serial-sum aggregates: every layer instance owns all cores
+    exclusively and pays its own weight program-in, so ``cycles`` is an
+    upper bound on end-to-end latency, not the pipelined number — that is
+    ``NetworkResult.scheduled`` (`core/scheduler.py`, DESIGN.md §Network
+    scheduler). ``edp`` sums per-layer EDPs (the paper's Fig. 5 metric)."""
     tot = {"cycles": 0.0, "energy_pj": 0.0, "edp": 0.0, "macs": 0.0}
     for lr in layers:
         tot["cycles"] += lr.cycles * lr.count
@@ -183,6 +205,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
                      workers: int | None = None,
                      cache: ResultCache | None = None,
                      use_cache: bool = True,
+                     schedule: bool = True,
+                     schedule_boundaries: Sequence[int] | None = None,
                      verbose: bool = False) -> NetworkResult:
     """Optimize every layer of a network and aggregate latency/energy/EDP.
 
@@ -194,6 +218,16 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
     over all unique layers (not just cache misses) so a rerun re-derives
     identical per-layer budgets and hence identical cache keys. Baseline
     modes (heuristic/greedy/random) are cheap and ignore the budget.
+
+    ``totals`` is the *serial sum* over instances (every layer alone on the
+    chip, weight reload at every boundary); with ``schedule=True`` (default)
+    the multi-core scheduler additionally packs weight-resident segments
+    and pipelines them (`core/scheduler.py`), filling ``result.scheduled``
+    (end-to-end cycles, never worse than ``totals['cycles']``) and
+    ``result.schedule``. Callers pooling several *independent* workloads
+    into one call (e.g. `benchmarks/lm_models.py`) must pass
+    ``schedule_boundaries`` — the start index of each sub-stream — so no
+    segment pipelines across unrelated networks.
     """
     from repro.core.energy import evaluate_edp
     from repro.core.formulation import FormulationConfig
@@ -292,12 +326,27 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
         out_layers.append(LayerResult(layer=layer, count=count, key=k,
                                       record=rec))
 
+    totals = _aggregate(out_layers)
+    scheduled = sched = None
+    if schedule:
+        from repro.core.scheduler import schedule_network
+        sched = schedule_network(out_layers, arch,
+                                 boundaries=schedule_boundaries,
+                                 verbose=verbose)
+        scheduled = sched.totals()
+        # energy of the mappings actually executed: the serial records'
+        # energy plus the delta of any pipelined greedy-basis swaps
+        # (zero when no swap engages — see scheduler.py guarantees)
+        scheduled["energy_pj"] = totals["energy_pj"] + \
+            sched.energy_delta_pj
+        scheduled["edp"] = scheduled["energy_pj"] * sched.scheduled_cycles
+
     return NetworkResult(
         mode=mode, arch_name=arch.name, layers=out_layers,
         n_unique=len(unique), n_solved=len(to_solve),
         cache_hits=cache_hits, budgets=budgets,
         wall_s=round(time.monotonic() - t0, 2),
-        totals=_aggregate(out_layers))
+        totals=totals, scheduled=scheduled, schedule=sched)
 
 
 def optimize_over_archs(layers: Sequence[wl.Layer],

@@ -1,0 +1,587 @@
+"""Network-level multi-core scheduler: weight-resident layer-to-core
+allocation + pipelined segment execution (DESIGN.md §Network scheduler).
+
+The network pipeline (`core/network.py`) scores a model as a *serial sum*
+of per-layer latencies: every layer owns all cores exclusively and pays its
+full macro weight program-in (mode-switch stall, paper Fig. 2(a)) at every
+layer boundary. System-level CIM efficiency is decided by *which weights
+stay resident on which cores* and how layers pipeline across them (CIMFlow,
+arXiv:2505.01107) — this module closes that gap on top of the per-layer
+mappings `optimize_network` already produced:
+
+  1. **Segment packing.** The ordered layer stream is partitioned into
+     contiguous *segments* whose combined weight footprints fit the chip's
+     macro capacity simultaneously (a dynamic program over all contiguous
+     splits; per-segment cost below). A stage whose weights exceed the chip
+     (count x weight bytes > all macros) — or whose mapping is not
+     weight-stationary to begin with — executes serially, exactly as the
+     per-layer record already models (intra-layer reloads included).
+  2. **Layer-to-core allocation.** Within a segment, stages partition the
+     core axis: stage i gets ``c_i`` cores, its (count_i) weight slices
+     spread across those cores' macros (capacity floor
+     ``count_i x w_bytes_i <= c_i x per-core macro bytes``), and computes
+     at the core-scaled per-item latency ``t_i(c_i)``. The split is a small
+     MIP over `core/mip/model.py` (one-hot core choice per stage, shared
+     core budget, makespan epigraph) with a greedy water-filling fallback
+     mirroring `network.allocate_budgets`; the better of the two is kept,
+     so the MIP never loses to the fallback.
+  3. **Pipelined segment schedule.** Weights load once per segment (one
+     DRAM->macro program-in per weight slice, ONE mode-switch exposure
+     instead of one per layer instance) and the stages stream activations
+     GBuf->GBuf: item k of stage i feeds item min(k, count_{i-1}-1) of
+     stage i+1. Segment latency:
+
+         load    = sum_i ceil(count_i * w_bytes_i / BW_dram) + switch
+         compute = exact makespan of the item stream at zero ready time
+                   (`simulator.stream_finish_times` — the identical
+                   recursion the event replay uses; the closed
+                   fill+bottleneck form serves only as the allocators'
+                   objective)
+
+     ``load + compute`` upper-bounds the event replay: the replay starts
+     stages as their own weights land (delaying every stage by at most
+     the full load delays the finish by at most the full load). The
+     simulator's network mode (`simulator.simulate_segment`) is the
+     out-of-band cross-check (`cross_check`), the same discipline
+     Fig. 4(a) applies to single layers.
+
+Cost-model fidelity: per-item latency at full cores is the *record's* own
+(MIP-fidelity) cycles minus its one-time weight fill — `weight_residency`
+mirrors `latency.evaluate`'s one-time accounting exactly — and the core
+sensitivity ``t_i(c)/t_i(n_cores)`` is probed with the same greedy
+constructor that warm-starts the MIP (`baselines.greedy_mapping` on a
+`arch.with_cores` variant), clamped monotone (more cores never hurt).
+When the record's mapping streams weights (the solo-latency MIP has no
+incentive to keep them resident), the scheduler may swap in the greedy
+incumbent's weight-stationary mapping as the stage basis — residency is
+exactly the network-level objective the per-layer solve cannot see.
+
+Guarantees:
+  * scheduled cycles <= serial cycles, always: every segment is charged
+    ``min(pipelined, serial)`` and the DP may always fall back to
+    serial singletons;
+  * strictly better whenever a segment of record-resident stages keeps
+    >=2 instances on chip (at minimum the saved mode-switch stalls);
+    greedy-basis swaps only ever engage when they win too;
+  * energy follows the mappings actually executed: record-basis segments
+    leave it unchanged (every weight slice loads exactly once per
+    instance in both schedules — the scheduler loads them *together*,
+    the serial baseline one-by-one), and a pipelined greedy-basis swap
+    charges its mapping's energy difference (`Schedule.energy_delta_pj`).
+
+Counts are treated as *distinct* weight sets (depth repeats). For
+batch-multiplicity counts the footprint is overcounted — a conservative
+simplification (fewer packing opportunities, never an infeasible one).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.core import workload as wl
+from repro.core.arch import CimArch, WEIGHT, core_axis, n_macros, with_cores
+from repro.core.cache import mapping_from_json
+from repro.core.latency import evaluate, operand_fill_hops
+from repro.core.mapping import Mapping
+
+#: Wall-clock cap per segment-allocation MIP (they are tens of binaries;
+#: the greedy fallback covers a cap hit).
+ALLOC_MIP_CAP_S = 2.0
+
+
+# ---------------------------------------------------------------------------
+# Weight residency (mirrors latency.evaluate's one-time fill accounting)
+# ---------------------------------------------------------------------------
+
+def weight_residency(mapping: Mapping, layer: wl.Layer,
+                     arch: CimArch) -> tuple[bool, float]:
+    """(resident, fill_cycles) for the weight operand.
+
+    ``resident`` iff no temporal slot ever retriggers a weight hop — the
+    weights are fully stationary after their one-time program-in, so they
+    *can* stay resident across executions. ``fill_cycles`` is exactly the
+    weight share of `latency.evaluate`'s one-time fills (both read the
+    same `latency.operand_fill_hops` chain), so
+    ``record cycles - fill_cycles`` is the per-item resident latency at
+    full cores. Non-resident mappings return (False, 0.0): their weight
+    traffic lives inside the recursion and cannot be split out."""
+    hops = operand_fill_hops(mapping, layer, arch, WEIGHT)
+    if any(triggered for triggered, _ in hops):
+        return False, 0.0
+    return True, sum(t for _, t in hops)
+
+
+def weight_bytes(layer: wl.Layer) -> int:
+    """One instance's weight footprint (INT8: one byte per element)."""
+    return layer.operand_elems(WEIGHT)
+
+
+def chip_macro_bytes(arch: CimArch) -> int:
+    """Total weight-resident capacity: every physical macro's cell array."""
+    cap = arch.level(arch.macro_level).capacity_bytes
+    assert cap is not None
+    return n_macros(arch) * cap
+
+
+# ---------------------------------------------------------------------------
+# Core-scaled per-item latency
+# ---------------------------------------------------------------------------
+
+class CoreScaling:
+    """Greedy-probe core-sensitivity curves, memoized per (layer key, c).
+
+    ``factor(layer, key, c)`` = greedy cycles on the c-core chip slice /
+    greedy cycles on the full chip, clamped >= 1 and monotone non-increasing
+    in c (a stage may always ignore surplus cores). The probes use the same
+    incumbent constructor that warm-starts the MIP, so the curve is cheap
+    (no solver) yet shape-aware; the absolute anchor stays the record's
+    MIP-fidelity cycles."""
+
+    def __init__(self, arch: CimArch):
+        from repro.core.baselines import greedy_mapping
+        self._greedy = greedy_mapping
+        self.arch = arch
+        ax = core_axis(arch)
+        self.n_cores = ax.size if ax is not None else 1
+        self._variant = {self.n_cores: arch}
+        self._cycles: dict[tuple[str, int], float] = {}
+        self._factor: dict[tuple[str, int], float] = {}
+
+    def _greedy_cycles(self, layer: wl.Layer, key: str, c: int) -> float:
+        k = (key, c)
+        if k not in self._cycles:
+            arch = self._variant.get(c)
+            if arch is None:
+                arch = self._variant[c] = with_cores(self.arch, c)
+            mp = self._greedy(layer, arch)
+            self._cycles[k] = evaluate(mp, layer, arch).total_cycles
+        return self._cycles[k]
+
+    def factor(self, layer: wl.Layer, key: str, c: int) -> float:
+        c = max(1, min(c, self.n_cores))
+        if c == self.n_cores:
+            return 1.0
+        k = (key, c)
+        if k not in self._factor:
+            base = self._greedy_cycles(layer, key, self.n_cores)
+            raw = max(1.0, self._greedy_cycles(layer, key, c) / max(base, 1.0))
+            # monotone: fewer cores are never faster than one more of them
+            self._factor[k] = max(raw, self.factor(layer, key, c + 1))
+        return self._factor[k]
+
+
+# ---------------------------------------------------------------------------
+# Plan dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StagePlan:
+    """One layer instance-group inside a segment."""
+
+    name: str
+    key: str                    # structural dedup key (cache.layer_cache_key)
+    count: int                  # executions (distinct weight sets, see above)
+    weight_bytes: int           # per-instance weight footprint
+    serial_cycles: float        # count x record cycles (the serial baseline)
+    resident_cycles: float      # per-item latency at full cores, weights in
+    resident: bool              # a weight-stationary mapping exists
+    basis: str = "record"       # mapping behind resident_cycles:
+                                # "record" | "greedy" (resident fallback)
+    #: count x (basis-mapping energy - record energy); nonzero only for
+    #: greedy-basis stages — charged iff the pipelined path is taken, so
+    #: scheduled energy always reflects the mappings actually executed.
+    energy_delta_pj: float = 0.0
+    c_min: int = 1              # capacity floor on allocated cores
+    cores: int = 0              # allocated cores (0 until planned)
+    t_cycles: float = 0.0       # per-item latency at `cores`
+
+    @property
+    def load_bytes(self) -> int:
+        return self.count * self.weight_bytes
+
+
+@dataclasses.dataclass
+class SegmentPlan:
+    """A contiguous run of stages whose weights are co-resident."""
+
+    stages: list[StagePlan]
+    load_cycles: float = 0.0         # one-time weight program-in, whole seg
+    compute_cycles: float = 0.0      # pipelined fill + bottleneck
+    serial_cycles: float = 0.0       # sum of per-stage serial baselines
+    #: "pipelined" iff the weight-resident schedule strictly beats the
+    #: serial fallback for this run of stages; "serial" otherwise (either
+    #: ineligible — non-resident / oversized — or pipelining simply loses,
+    #: e.g. core partitioning costs more than the saved reloads).
+    mode: str = "serial"
+    allocator: str = "-"             # "mip" | "greedy" | "-"
+
+    @property
+    def pipelined_cycles(self) -> float:
+        return self.load_cycles + self.compute_cycles
+
+    @property
+    def cycles(self) -> float:
+        """What the schedule charges: never worse than serial."""
+        if self.mode == "pipelined":
+            return self.pipelined_cycles
+        return self.serial_cycles
+
+    @property
+    def packed(self) -> bool:
+        """True when the segment genuinely keeps >1 weight-resident
+        instance on chip AND the pipelined schedule is the one taken —
+        i.e. this segment strictly beats its serial baseline."""
+        return self.mode == "pipelined" and \
+            sum(st.count for st in self.stages) > 1
+
+    @property
+    def energy_delta_pj(self) -> float:
+        """Energy adjustment vs the serial records: nonzero only when the
+        pipelined path executes greedy-basis (swapped) mappings."""
+        if self.mode != "pipelined":
+            return 0.0
+        return sum(st.energy_delta_pj for st in self.stages)
+
+
+@dataclasses.dataclass
+class Schedule:
+    arch_name: str
+    segments: list[SegmentPlan]
+    serial_cycles: float
+    scheduled_cycles: float
+
+    @property
+    def n_packed(self) -> int:
+        return sum(seg.packed for seg in self.segments)
+
+    @property
+    def saved_cycles(self) -> float:
+        return self.serial_cycles - self.scheduled_cycles
+
+    @property
+    def energy_delta_pj(self) -> float:
+        return sum(seg.energy_delta_pj for seg in self.segments)
+
+    def totals(self) -> dict[str, float]:
+        return {
+            "cycles": self.scheduled_cycles,
+            "serial_cycles": self.serial_cycles,
+            "saved_cycles": self.saved_cycles,
+            "n_segments": float(len(self.segments)),
+            "n_packed": float(self.n_packed),
+            "energy_delta_pj": self.energy_delta_pj,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Per-segment cost: core allocation (MIP + greedy water-filling fallback)
+# ---------------------------------------------------------------------------
+
+#: Multi-stage runs whose item streams exceed this are not pipelined
+#: (packable segments are naturally small — every instance's weights must
+#: fit the macros — so this is a guard, not a working limit).
+ITEM_FLOW_CAP = 100_000
+
+
+def _pipeline_compute(ts: Sequence[float], counts: Sequence[int]) -> float:
+    """Fill + bottleneck closed form — the *allocation objective* only
+    (linear in the MIP's one-hot terms; exact when stage counts are equal,
+    optimistic when a downstream stage has more items than an upstream
+    one). Segments are *charged* with the exact item recursion
+    (`_exact_compute`), never with this."""
+    return sum(ts) + max((n - 1) * t for n, t in zip(counts, ts))
+
+
+def _exact_compute(ts: Sequence[float], counts: Sequence[int]) -> float:
+    """Exact makespan of the index-matched item stream at zero ready time
+    — the same recursion `simulator.simulate_segment` replays, so
+    ``load + _exact_compute`` upper-bounds the replay (delaying every
+    stage's start by at most the full load delays the finish by at most
+    the full load)."""
+    if len(ts) == 1:
+        return counts[0] * ts[0]
+    from repro.core.simulator import stream_finish_times
+    return max(stream_finish_times(counts, ts, [0.0] * len(ts)))
+
+
+def _allocate_greedy(stages: Sequence[StagePlan], n_cores: int,
+                     t_of) -> list[int]:
+    """Water-filling: start every stage at its capacity floor, then hand
+    spare cores to whichever stage improves the pipelined makespan most
+    (mirroring `network.allocate_budgets`' redistribution). Grants are
+    multi-core jumps, not single increments: layer factorizations are
+    mostly powers of two, so the latency curve is a staircase and +1 core
+    frequently sits on a plateau that +2 escapes."""
+    alloc = [st.c_min for st in stages]
+    counts = [st.count for st in stages]
+    spare = n_cores - sum(alloc)
+
+    def obj(a: list[int]) -> float:
+        return _pipeline_compute([t_of(i, c) for i, c in enumerate(a)],
+                                 counts)
+
+    cur = obj(alloc)
+    while spare > 0:
+        best = None                     # (obj, extra_cores, stage index)
+        for i in range(len(stages)):
+            for extra in range(1, spare + 1):
+                trial = list(alloc)
+                trial[i] += extra
+                o = obj(trial)
+                if o < cur - 1e-9 and \
+                        (best is None or (o, extra) < best[:2]):
+                    best = (o, extra, i)
+        if best is None:
+            break
+        cur, extra, i = best
+        alloc[i] += extra
+        spare -= extra
+    return alloc
+
+
+def _allocate_mip(stages: Sequence[StagePlan], n_cores: int, t_of,
+                  time_limit_s: float = ALLOC_MIP_CAP_S) -> list[int] | None:
+    """Exact core split: one-hot core choice per stage, shared core budget,
+    makespan epigraph variable. Returns None when the solver yields nothing
+    usable (the caller keeps the greedy split)."""
+    from repro.core.mip.model import LinExpr, MipModel
+
+    m = MipModel("sched-alloc")
+    zero = LinExpr({}, 0.0)
+    xs: list[dict[int, object]] = []
+    for i, st in enumerate(stages):
+        vs = {c: m.add_binary(f"x[{i},{c}]")
+              for c in range(st.c_min, n_cores + 1)}
+        m.add_eq(sum(vs.values(), zero), 1.0)
+        xs.append(vs)
+    m.add_le(sum((c * v for vs in xs for c, v in vs.items()), zero),
+             float(n_cores))
+    z = m.add_var("makespan", 0.0)
+    fill = zero
+    for i, (st, vs) in enumerate(zip(stages, xs)):
+        m.add_ge(z - sum(((st.count - 1) * t_of(i, c)) * v
+                         for c, v in vs.items()), 0.0)
+        fill = fill + sum((t_of(i, c) * v for c, v in vs.items()), zero)
+    m.minimize(z + fill)
+    try:
+        sol = m.solve(time_limit_s=time_limit_s, mip_rel_gap=0.0)
+    except Exception:
+        return None
+    if not sol.ok:
+        return None
+    alloc = []
+    for vs in xs:
+        c = max(vs, key=lambda c: sol[vs[c]])
+        if sol[vs[c]] < 0.5:
+            return None
+        alloc.append(c)
+    if sum(alloc) > n_cores:
+        return None
+    return alloc
+
+
+def _plan_segment(stages: list[StagePlan], arch: CimArch, n_cores: int,
+                  scaling: CoreScaling, *, use_mip: bool,
+                  mip_time_limit_s: float,
+                  layers_of: dict[str, wl.Layer]) -> SegmentPlan:
+    seg = SegmentPlan(stages=stages,
+                      serial_cycles=sum(st.serial_cycles for st in stages))
+    if any(not st.resident or st.c_min > n_cores for st in stages):
+        assert len(stages) == 1, "non-resident stages must be singletons"
+        return seg                                  # serial, as recorded
+
+    def t_of(i: int, c: int) -> float:
+        st = stages[i]
+        return st.resident_cycles * scaling.factor(layers_of[st.key],
+                                                   st.key, c)
+
+    counts = [st.count for st in stages]
+
+    def exact_of(a: Sequence[int]) -> float:
+        return _exact_compute([t_of(i, c) for i, c in enumerate(a)], counts)
+
+    alloc = _allocate_greedy(stages, n_cores, t_of)
+    allocator = "greedy"
+    if use_mip and len(stages) > 1:
+        mip = _allocate_mip(stages, n_cores, t_of,
+                            time_limit_s=mip_time_limit_s)
+        # both candidates are judged by the EXACT charge, so the MIP's
+        # allocation never loses to the greedy fallback under the metric
+        # the segment is actually billed with
+        if mip is not None and exact_of(mip) <= exact_of(alloc) + 1e-9:
+            alloc, allocator = mip, "mip"
+    bw = arch.level(0).bytes_per_cycle()
+    load = 0.0
+    for i, (st, c) in enumerate(zip(stages, alloc)):
+        st.cores = c
+        st.t_cycles = t_of(i, c)
+        load += math.ceil(st.load_bytes / bw)
+    seg.load_cycles = load + arch.mode_switch_cycles
+    seg.compute_cycles = exact_of(alloc)
+    seg.allocator = allocator
+    if seg.pipelined_cycles < seg.serial_cycles:
+        seg.mode = "pipelined"
+    return seg
+
+
+# ---------------------------------------------------------------------------
+# Schedule: DP over contiguous segmentations
+# ---------------------------------------------------------------------------
+
+def schedule_network(layers: Sequence, arch: CimArch, *,
+                     boundaries: Sequence[int] | None = None,
+                     use_mip: bool = True,
+                     mip_time_limit_s: float = ALLOC_MIP_CAP_S,
+                     verbose: bool = False) -> Schedule:
+    """Schedule a network's solved layers onto the chip.
+
+    ``layers`` is `NetworkResult.layers` (or any sequence of objects with
+    ``.layer``, ``.count``, ``.key`` and ``.record``, the record carrying
+    the solved ``mapping`` + ``cycles``). Stages keep input order (network
+    order is execution order); segmentation is a DP over every contiguous
+    split, each segment costed at ``min(pipelined, serial)``, so the total
+    is optimal for the segment cost model and never worse than the serial
+    sum. The final chosen multi-stage segments are re-allocated with the
+    exact MIP (greedy fallback, never worse).
+
+    ``boundaries`` marks indices where a new *independent* layer stream
+    starts (e.g. the next (model, scenario) workload in a pooled
+    benchmark call): no segment may span one — scheduling across
+    unrelated networks would fabricate pipelining that can never
+    execute."""
+    ax = core_axis(arch)
+    n_cores = ax.size if ax is not None else 1
+    core_bytes = chip_macro_bytes(arch) // max(n_cores, 1)
+    scaling = CoreScaling(arch)
+
+    # ---- stage list (one per input layer record, input order) -------------
+    # A stage is pipeline-eligible when a weight-stationary mapping exists
+    # for it: the record's own mapping when it is resident, else the greedy
+    # incumbent's (the per-layer MIP minimizes *solo* latency and may
+    # happily stream weights — network-level residency is exactly the
+    # objective it cannot see, so the scheduler may swap mappings; the
+    # serial baseline always keeps the record's number and the min() guard
+    # keeps the swap strictly-improving-or-ignored).
+    from repro.core.baselines import greedy_mapping
+    from repro.core.energy import evaluate_edp
+
+    stages: list[StagePlan] = []
+    layers_of: dict[str, wl.Layer] = {}
+    # key -> (resident, resident_cycles, basis, per-instance energy delta)
+    basis_of: dict[str, tuple[bool, float, str, float]] = {}
+    for lr in layers:
+        key = lr.key
+        layers_of.setdefault(key, lr.layer)
+        if key not in basis_of:
+            mp = mapping_from_json(lr.record["mapping"])
+            resident, fill = weight_residency(mp, lr.layer, arch)
+            if resident:
+                basis_of[key] = (True, max(lr.record["cycles"] - fill, 1.0),
+                                 "record", 0.0)
+            else:
+                gmp = greedy_mapping(lr.layer, arch)
+                g_res, g_fill = weight_residency(gmp, lr.layer, arch)
+                if g_res:
+                    g = evaluate_edp(gmp, lr.layer, arch)
+                    basis_of[key] = (
+                        True, max(g.latency.total_cycles - g_fill, 1.0),
+                        "greedy",
+                        g.energy.total_pj - lr.record["energy_pj"])
+                else:
+                    basis_of[key] = (False, 0.0, "record", 0.0)
+        resident, rc, basis, de = basis_of[key]
+        w = weight_bytes(lr.layer)
+        c_min = max(1, math.ceil(lr.count * w / max(core_bytes, 1)))
+        stages.append(StagePlan(
+            name=lr.layer.name, key=key, count=int(lr.count),
+            weight_bytes=w,
+            serial_cycles=lr.count * lr.record["cycles"],
+            resident_cycles=rc, resident=resident, basis=basis,
+            energy_delta_pj=lr.count * de, c_min=c_min))
+
+    # ---- DP over contiguous splits ----------------------------------------
+    # cost(i, j) = min(pipelined, serial) for stages[i:j]; a run is
+    # pipeline-eligible iff every stage is resident and the capacity floors
+    # fit the core budget together. Greedy allocation inside the DP (cheap,
+    # memoized probes); the exact MIP refines the winning segmentation.
+    n = len(stages)
+    best = [0.0] + [math.inf] * n
+    cut = [0] * (n + 1)
+    cuts_inside = sorted(b for b in set(boundaries or ()) if 0 < b < n)
+
+    def run_cost(i: int, j: int) -> float:
+        if any(i < b < j for b in cuts_inside):
+            return math.inf           # independent streams never co-pack
+        sub = stages[i:j]
+        if len(sub) > 1 and (
+                any(not st.resident for st in sub) or
+                sum(st.c_min for st in sub) > n_cores or
+                sum(st.count for st in sub) > ITEM_FLOW_CAP):
+            return math.inf
+        seg = _plan_segment([dataclasses.replace(st) for st in sub],
+                            arch, n_cores, scaling, use_mip=False,
+                            mip_time_limit_s=mip_time_limit_s,
+                            layers_of=layers_of)
+        return seg.cycles
+
+    for j in range(1, n + 1):
+        for i in range(j - 1, -1, -1):
+            if j - i > n_cores:        # each stage needs >= 1 core
+                break
+            c = run_cost(i, j)
+            if best[i] + c < best[j]:
+                best[j], cut[j] = best[i] + c, i
+            if c == math.inf and j - i > 1:
+                break                  # longer runs only get harder
+
+    # ---- materialize the chosen segments (exact-MIP refinement) -----------
+    bounds: list[tuple[int, int]] = []
+    j = n
+    while j > 0:
+        bounds.append((cut[j], j))
+        j = cut[j]
+    bounds.reverse()
+    segments = [
+        _plan_segment(stages[i:j], arch, n_cores, scaling,
+                      use_mip=use_mip, mip_time_limit_s=mip_time_limit_s,
+                      layers_of=layers_of)
+        for i, j in bounds]
+
+    serial = sum(st.serial_cycles for st in stages)
+    scheduled = sum(seg.cycles for seg in segments)
+    if verbose:
+        packed = sum(seg.packed for seg in segments)
+        print(f"[scheduler/{arch.name}] {n} stages -> {len(segments)} "
+              f"segments ({packed} packed): {serial:.4g} serial -> "
+              f"{scheduled:.4g} scheduled cycles")
+    return Schedule(arch_name=arch.name, segments=segments,
+                    serial_cycles=serial, scheduled_cycles=scheduled)
+
+
+# ---------------------------------------------------------------------------
+# Event-simulator cross-check (the Fig. 4(a) discipline, network mode)
+# ---------------------------------------------------------------------------
+
+def cross_check(schedule: Schedule, arch: CimArch, *,
+                max_items: int = 100_000) -> tuple[float, int]:
+    """(mean accuracy, n segments checked) of the analytical segment model
+    against `simulator.simulate_segment` over every pipelined segment small
+    enough to replay. Accuracy per segment is 1 - |model - sim| / sim —
+    the exact metric the Fig. 4(a) benchmark and `test_latency_model`'s
+    simulator-agreement gate use for single layers."""
+    from repro.core.simulator import simulate_segment
+
+    accs = []
+    for seg in schedule.segments:
+        if seg.mode != "pipelined":
+            continue
+        if sum(st.count for st in seg.stages) > max_items:
+            continue
+        sim = simulate_segment(
+            [(st.count, st.t_cycles, st.load_bytes) for st in seg.stages],
+            arch)
+        accs.append(1.0 - abs(seg.pipelined_cycles - sim.total_cycles) /
+                    max(sim.total_cycles, 1.0))
+    return (sum(accs) / len(accs) if accs else 1.0), len(accs)

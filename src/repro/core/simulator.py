@@ -24,7 +24,10 @@ analytical model (`latency.evaluate` via `energy.evaluate_edp` — DESIGN.md
 §Network pipeline); the simulator is the *out-of-band* cross-check, driven
 by `benchmarks/fig4a_model_accuracy.py` (accuracy over sampled mappings)
 and `examples/quickstart.py` (single-layer sanity check). It never sits on
-the solve path.
+the solve path. `simulate_segment` is the *network-mode* counterpart: it
+replays one weight-resident segment of the multi-core scheduler
+(`core/scheduler.py`) and cross-checks the analytical schedule model the
+same way (`scheduler.cross_check`, `benchmarks/sched_lm.py`).
 """
 
 from __future__ import annotations
@@ -190,6 +193,91 @@ def simulate(mapping: Mapping, layer: wl.Layer, arch: CimArch,
     final = max([compute_free] + chan_free)
     return SimReport(total_cycles=final, mvm_count=total_mvm,
                      stall_breakdown=stalls)
+
+
+# ---------------------------------------------------------------------------
+# Network mode: segment-level event simulation (DESIGN.md §Network scheduler)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SegmentSimReport:
+    total_cycles: float
+    load_cycles: float          # when the last weight program-in leaves the bus
+    stage_finish: list[float]   # per stage, its last item's completion time
+
+
+def stream_finish_times(counts, ts, ready) -> list[float]:
+    """Last-item finish time per stage of the index-matched item stream:
+    item k of stage i starts after item k-1 on the same stage AND item
+    min(k, count_{i-1}-1) of the upstream stage, each item taking ``ts[i]``
+    cycles, stage i's first item not before ``ready[i]``. This recursion IS
+    the segment dependency structure — `simulate_segment` replays it with
+    bus-serialized ready times, and the scheduler charges its segments
+    with the zero-ready evaluation (`scheduler`), so the two can never
+    encode different pipelines."""
+    finish_prev: list[float] | None = None
+    out: list[float] = []
+    for n, t, rdy in zip(counts, ts, ready):
+        fin = [0.0] * n
+        cur = float(rdy)
+        for k in range(n):
+            dep = 0.0
+            if finish_prev is not None:
+                dep = finish_prev[min(k, len(finish_prev) - 1)]
+            fin[k] = max(cur, dep) + t
+            cur = fin[k]
+        finish_prev = fin
+        out.append(fin[-1])
+    return out
+
+
+def simulate_segment(stages, arch: CimArch,
+                     max_items: int = 1_000_000) -> SegmentSimReport:
+    """Event-driven replay of one weight-resident segment — the network-mode
+    counterpart of `simulate` that validates the scheduler's analytical
+    segment model (`scheduler._pipeline_compute` + load term) the way
+    Fig. 4(a) validates `latency.evaluate` for single layers.
+
+    ``stages`` is an ordered sequence of ``(count, t_cycles, load_bytes)``
+    triples (what `scheduler.SegmentPlan` stages carry): ``count`` items of
+    ``t_cycles`` each, with ``load_bytes`` of weights programmed into the
+    stage's macros before its first item. Mechanics, reusing the single-layer
+    machinery's conventions:
+
+      * every weight program-in is a `Hop` (DRAM -> macro, macro-reload) and
+        all of them serialize on the DRAM bus channel (``chan_free[0]``,
+        exactly like `simulate`'s per-source-level channels); the stage's
+        cores then pay ``mode_switch_cycles`` off-bus before computing;
+      * items stream: item k of stage i starts after item k-1 on the same
+        stage's cores AND item min(k, count_{i-1}-1) of the upstream stage
+        (GBuf->GBuf activation streaming; index-matched, surplus downstream
+        items follow the last upstream item — `stream_finish_times`, the
+        same recursion the scheduler charges its segments with).
+
+    Unlike the analytical model — which conservatively serializes the whole
+    segment load before any compute — the replay lets early stages compute
+    while later stages' weights still stream, so it never finishes later;
+    agreement within the Fig. 4(a) tolerance is what
+    `scheduler.cross_check` asserts."""
+    stages = [(int(n), float(t), int(b)) for n, t, b in stages]
+    if sum(n for n, _, _ in stages) > max_items:
+        raise ValueError(f"segment items exceed max_items {max_items}")
+    bw = arch.level(0).bytes_per_cycle()
+    chan_free = [0.0] * arch.n_levels
+    hops = [Hop(WEIGHT, 0, arch.macro_level, math.ceil(b / bw), (),
+                False, True) for _, _, b in stages]
+    ready: list[float] = []
+    for hop in hops:
+        start = chan_free[hop.src]
+        chan_free[hop.src] = start + hop.chunk_cycles
+        ready.append(chan_free[hop.src] + arch.mode_switch_cycles)
+    load_cycles = chan_free[0]
+
+    stage_finish = stream_finish_times(
+        [n for n, _, _ in stages], [t for _, t, _ in stages], ready)
+    total = max(stage_finish + [load_cycles])
+    return SegmentSimReport(total_cycles=total, load_cycles=load_cycles,
+                            stage_finish=stage_finish)
 
 
 def _will_change(counters: list[int], slots, watch: tuple[int, ...]) -> bool:
