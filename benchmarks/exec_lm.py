@@ -1,0 +1,224 @@
+"""Measured execution across the LM zoo: optimized plans on the Pallas
+kernels, predicted cycles vs measured wall-clock (`core/executor.py`,
+DESIGN.md §Executor).
+
+Each (model, scenario) row extracts its workload, solves it through the
+network pipeline, lowers the result to an ``ExecPlan`` (GEMMs on
+`kernels/matmul_int8` with mapping-derived blocks, attention score/AV on
+`kernels/flash_attention`, the SSD intra-chunk pair fused on
+`kernels/ssd_scan`) and executes it in Pallas interpret mode (CPU; pass
+``--no-interpret`` on real hardware). Every kernel invocation is checked
+against its ``ref.py`` oracle, and per-op predicted cycles are *ranked*
+against measured seconds — the Fig. 4(a) discipline, now
+model-vs-execution instead of model-vs-simulator.
+
+Scenarios are execution-sized (`EXEC_SHAPES`): interpret mode emulates the
+grid step-by-step in Python, so the 32k-token prediction scenarios are not
+execution targets — the point is rank agreement, which small shapes
+already decide.
+
+Registered as the ``exec`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python -m benchmarks.exec_lm --reduced
+    PYTHONPATH=src python -m benchmarks.exec_lm \\
+        --archs minicpm-2b,mamba2-1.3b --scenarios exec_prefill
+
+``--reduced`` is the CI acceptance path (exec-smoke): every executed
+kernel output must match its reference, the pooled rank correlation must
+clear ``RANK_FLOOR``, and all three kernel families must have run.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import md_table, write_report
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeSpec
+from repro.core.arch import default_arch
+from repro.core.executor import execute_plan, lower_plan, spearman
+from repro.core.frontend import extract_workload
+from repro.core.network import optimize_network
+
+#: Execution-sized scenario cells (see module docstring).
+EXEC_SHAPES = {
+    "exec_prefill": ShapeSpec("exec_prefill", seq_len=512, global_batch=1,
+                              kind="prefill"),
+    "exec_decode": ShapeSpec("exec_decode", seq_len=256, global_batch=16,
+                             kind="decode"),
+}
+#: Reduced-mode model subset: one attention family + one SSD family keeps
+#: every kernel dispatch path on the CI critical path.
+REDUCED_ARCHS = ("minicpm-2b", "mamba2-1.3b")
+#: Acceptance floor on the pooled per-op Spearman (predicted cycles vs
+#: measured seconds). Interpret-mode CPU timing of small ops is noisy per
+#: row; pooled across rows the monotone signal is strong (~0.7 observed),
+#: so 0.5 gates real regressions without flaking on timer jitter.
+RANK_FLOOR = 0.5
+MIN_RANK_POINTS = 8
+#: Quick-mode solver knobs (same spirit as benchmarks/sched_lm.py).
+QUICK_CAP_S = 2.0
+QUICK_AVG_S = 1.0
+
+
+def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
+        archs: tuple[str, ...] | None = None,
+        scenarios: tuple[str, ...] | None = None,
+        mode: str = "miredo", repeats: int = 3, seed: int = 0,
+        interpret: bool = True, workers: int | None = 1) -> dict:
+    quick = quick or reduced
+    arch = default_arch()
+    arch_ids = tuple(archs) if archs else (
+        REDUCED_ARCHS if reduced else ARCH_IDS)
+    if interpret and not reduced:
+        print("[exec] WARNING: interpret mode emulates every grid step in "
+              "Python — full-size configs can take hours per row; use "
+              "--reduced on CPU or --no-interpret on real hardware",
+              flush=True)
+    scen = tuple(scenarios) if scenarios else tuple(EXEC_SHAPES)
+    unknown = set(scen) - set(EXEC_SHAPES)
+    if unknown:
+        raise KeyError(f"unknown exec scenario(s) {sorted(unknown)}; "
+                       f"known: {sorted(EXEC_SHAPES)}")
+
+    rows, table, pooled = [], [], []
+    kernels_seen: set[str] = set()
+    pool_seen: set = set()     # structural op keys: unique ACROSS rows too
+    exec_memo: dict = {}       # shared measurements (same settings per run)
+    for aid in arch_ids:
+        cfg = get_config(aid)
+        if reduced:
+            cfg = cfg.reduced()
+        for sname in scen:
+            spec = EXEC_SHAPES[sname]
+            work = extract_workload(cfg, spec)
+            cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+            total = QUICK_AVG_S * work.n_unique if quick else None
+            net = optimize_network(list(work.layers), arch, mode,
+                                   counts=list(work.counts),
+                                   per_layer_cap_s=cap,
+                                   total_budget_s=total, workers=workers)
+            plan = lower_plan(cfg, spec, net, arch)
+            rep = execute_plan(plan, interpret=interpret, repeats=repeats,
+                               seed=seed, memo=exec_memo)
+            # pool per-op rank points, structurally unique across ALL rows
+            # (reduced configs share shapes; a duplicated op would enter
+            # identical predicted cycles twice and pad the gates)
+            for op in plan.ops:
+                if op.predicted_cycles is None or op.measured_s is None \
+                        or op.key in pool_seen:
+                    continue
+                pool_seen.add(op.key)
+                pooled.append((op.predicted_cycles, op.measured_s))
+            kernels_seen |= {op.kernel for op in plan.ops}
+            rows.append({
+                "model": aid, "scenario": sname, "ops": rep.n_ops,
+                "unique": rep.n_unique,
+                "predicted_serial_cycles": plan.predicted_serial_cycles,
+                "predicted_scheduled_cycles":
+                    plan.predicted_scheduled_cycles,
+                "measured_s": rep.measured_total_s,
+                "rank_corr": rep.rank_corr,
+                "numerics_ok": rep.numerics_ok,
+                "max_rel_err": rep.max_rel_err,
+            })
+            table.append([
+                aid, sname, rep.n_ops, rep.n_unique,
+                f"{plan.predicted_serial_cycles:.4g}",
+                f"{plan.predicted_scheduled_cycles:.4g}"
+                if plan.predicted_scheduled_cycles else "-",
+                f"{rep.measured_total_s * 1e3:.1f}",
+                f"{rep.rank_corr:.2f}" if rep.rank_corr is not None
+                else "-",
+                f"{rep.max_rel_err:.1e}",
+                "ok" if rep.numerics_ok else "FAIL"])
+
+    headers = ["model", "scenario", "ops", "unique", "pred serial cyc",
+               "pred sched cyc", "measured ms", "rank", "max rel err",
+               "numerics"]
+    print(md_table(headers, table))
+    pooled_rank = spearman([p for p, _ in pooled], [m for _, m in pooled])
+    n_bad = sum(not r["numerics_ok"] for r in rows)
+    print(f"[exec/{mode}] {len(rows)} (model, scenario) rows, "
+          f"{len(pooled)} pooled rank points, pooled spearman "
+          f"{pooled_rank if pooled_rank is None else round(pooled_rank, 3)}"
+          f", kernels {sorted(kernels_seen)}, "
+          f"{n_bad} rows failed numerics")
+
+    payload = {"mode": mode, "interpret": interpret, "rows": rows,
+               "pooled_rank_corr": pooled_rank,
+               "n_rank_points": len(pooled),
+               "kernels": sorted(kernels_seen)}
+    write_report("exec_lm", payload)
+
+    # --reduced is the CI acceptance path (exec-smoke): enforce the
+    # executor's contract instead of warning, so regressions fail the job.
+    if reduced:
+        for r in rows:
+            if not r["numerics_ok"]:
+                raise RuntimeError(
+                    f"{r['model']}/{r['scenario']}: kernel output diverged "
+                    f"from its ref.py oracle (max rel err "
+                    f"{r['max_rel_err']:.2e})")
+        # pool-level gates (rank statistic, kernel coverage) are calibrated
+        # for the full reduced pool — user-narrowed --archs/--scenarios
+        # subsets keep the per-row numerics gate only
+        full_pool = not archs and not scenarios
+        if full_pool and len(pooled) < MIN_RANK_POINTS:
+            raise RuntimeError(
+                f"only {len(pooled)} rank points — the reduced run must "
+                f"exercise >= {MIN_RANK_POINTS} predicted ops")
+        if full_pool and pooled_rank is None:
+            raise RuntimeError(
+                "pooled rank correlation undefined: predicted or measured "
+                "side is constant across all ops")
+        if full_pool and pooled_rank is not None and \
+                pooled_rank < RANK_FLOOR:
+            raise RuntimeError(
+                f"pooled predicted-vs-measured rank correlation "
+                f"{pooled_rank:.3f} < {RANK_FLOOR} (Fig. 4(a) discipline, "
+                f"model-vs-execution)")
+        missing = {"matmul_int8", "flash_attention", "ssd_scan"} - \
+            kernels_seen
+        if full_pool and missing:
+            raise RuntimeError(f"kernel families never dispatched: "
+                               f"{sorted(missing)}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick solver caps (implied by --reduced)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke-test reductions of the LM configs + "
+                         "quick caps + acceptance gates")
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer MIP cap (seconds; quick mode clamps)")
+    ap.add_argument("--archs", default="",
+                    help=f"comma list of arch ids (default: "
+                         f"{', '.join(REDUCED_ARCHS)} reduced, else all of "
+                         f"{', '.join(ARCH_IDS)})")
+    ap.add_argument("--scenarios", default="",
+                    help="comma list of exec scenario names (default: "
+                         + ",".join(EXEC_SHAPES) + ")")
+    ap.add_argument("--mode", default="miredo")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats per unique op (min is reported)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-interpret", action="store_true",
+                    help="compile the Pallas kernels for real hardware "
+                         "instead of interpret-mode CPU emulation")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="solver processes (keep 1 once JAX is loaded)")
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
+        archs=tuple(a for a in args.archs.split(",") if a) or None,
+        scenarios=tuple(s for s in args.scenarios.split(",") if s) or None,
+        mode=args.mode, repeats=args.repeats, seed=args.seed,
+        interpret=not args.no_interpret, workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -99,6 +99,30 @@ def bench_section() -> str:
                 f"{r['n_packed']} | {r['serial_cycles']:.4g} | "
                 f"{r['scheduled_cycles']:.4g} | {r['speedup']:.3f}x |")
         out.append("\n".join(lines))
+    ex = load("exec_lm")
+    if ex:
+        rank = ex["pooled_rank_corr"]
+        mode = "interpret mode" if ex["interpret"] else "compiled"
+        rank_txt = f"{rank:.3f}" if rank is not None else "n/a"
+        lines = [
+            f"**Measured execution (beyond paper)** — optimized plans run "
+            f"on the Pallas kernels ({mode}), kernels "
+            f"{', '.join(ex['kernels'])}: pooled predicted-vs-measured "
+            f"rank correlation {rank_txt} over {ex['n_rank_points']} "
+            f"ops.", "",
+            "| model | scenario | ops | pred serial cyc | measured ms | "
+            "rank | max rel err | numerics |",
+            "|---|---|---|---|---|---|---|---|"]
+        for r in ex["rows"]:
+            rr = f"{r['rank_corr']:.2f}" if r["rank_corr"] is not None \
+                else "-"
+            lines.append(
+                f"| {r['model']} | {r['scenario']} | {r['ops']} | "
+                f"{r['predicted_serial_cycles']:.4g} | "
+                f"{r['measured_s'] * 1e3:.1f} | {rr} | "
+                f"{r['max_rel_err']:.1e} | "
+                f"{'ok' if r['numerics_ok'] else 'FAIL'} |")
+        out.append("\n".join(lines))
     dse = load("dse_pareto")
     if dse:
         lines = [

@@ -3,10 +3,13 @@
 One benchmark per paper table/figure, plus the beyond-paper jobs: the TPU
 bridge, the ``lm`` job (the whole LM model zoo lowered through the model
 frontend, ``benchmarks/lm_models.py``), the ``dse`` job (hardware/
-dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``) and the
+dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``), the
 ``sched`` job (serial-sum vs multi-core-scheduled end-to-end latency,
-``benchmarks/sched_lm.py``). ``--quick`` trims solve budgets; results
-cache under reports/cache so reruns are incremental.
+``benchmarks/sched_lm.py``) and the ``exec`` job (optimized plans executed
+on the Pallas kernels, predicted vs measured, ``benchmarks/exec_lm.py``).
+``--quick`` trims solve budgets; results cache under reports/cache so
+reruns are incremental. Unknown ``--only`` names fail the run — a typo
+must not produce an empty, green harness.
 """
 
 from __future__ import annotations
@@ -21,12 +24,12 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm,dse,sched")
+                         "flexfact,bridge,lm,dse,sched,exec")
     args = ap.parse_args(argv)
     budget = 20.0 if args.quick else 60.0
-    only = set(args.only.split(",")) if args.only else None
+    only = set(filter(None, args.only.split(","))) if args.only else None
 
-    from benchmarks import (dse_pareto, fig4a_model_accuracy,
+    from benchmarks import (dse_pareto, exec_lm, fig4a_model_accuracy,
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
                             sched_lm, tab_flexfact, tpu_bridge_bench)
@@ -47,7 +50,22 @@ def main(argv=None):
                                        reduced=args.quick)),
         ("sched", lambda: sched_lm.run(budget_s=budget, quick=args.quick,
                                        reduced=args.quick)),
+        # exec always runs reduced: interpret mode emulates every grid step
+        # in Python, so full-size configs are a real-hardware exercise
+        # (benchmarks/exec_lm.py --no-interpret), not a harness target.
+        ("exec", lambda: exec_lm.run(budget_s=budget, quick=args.quick,
+                                     reduced=True)),
     ]
+    # A typo'd --only used to run zero jobs and still print "All benchmarks
+    # complete" with exit 0 — validate against the job list instead.
+    known = {name for name, _ in jobs}
+    if only is not None:
+        unknown = only - known
+        if unknown or not only:
+            what = ", ".join(sorted(unknown)) if unknown else "(none given)"
+            print(f"unknown --only job(s): {what}; "
+                  f"known: {', '.join(name for name, _ in jobs)}")
+            return 2
     failures = []
     for name, fn in jobs:
         if only and name not in only:

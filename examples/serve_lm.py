@@ -2,7 +2,10 @@
 (reduced glm4-9b config on CPU; the same step functions the dry-run lowers
 for the production mesh), then the CIM side of the same question: the model
 frontend (core/frontend.py) lowers this exact serving config to its
-weight-GEMM workload and MIREDO reports the optimized dataflow mapping.
+weight-GEMM workload, MIREDO reports the optimized dataflow mapping, and
+the measured-execution backend (core/executor.py) actually *runs* the
+served decode step's optimized plan on the Pallas kernels — every kernel
+checked against its ref.py oracle, wall-clock vs predicted cycles.
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -56,11 +59,12 @@ def main():
     assert out.shape == (batch, gen_len + 1)
     assert np.all(np.asarray(out) >= 0)
 
-    report_cim_dataflow(cfg, batch)
+    report_cim_dataflow(cfg, batch, context_len=max_seq)
     print("OK")
 
 
-def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0):
+def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0,
+                        context_len: int = 64):
     """What dataflow should a CIM accelerator use for this serving config?
 
     Lowers the decode step of the served config to its weight-GEMM
@@ -70,13 +74,17 @@ def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0):
     from repro.core.frontend import extract_workload
     from repro.core.network import optimize_network
 
-    spec = ShapeSpec("serve_decode", seq_len=1, global_batch=batch,
-                     kind="decode")
+    arch = default_arch()
+    # seq_len is the serving context: the decode GEMMs only see the batch
+    # (m_tokens), but the executor's decode attention step attends a KV
+    # cache of this length — seq_len=1 would make it a one-key softmax.
+    spec = ShapeSpec("serve_decode", seq_len=context_len,
+                     global_batch=batch, kind="decode")
     work = extract_workload(cfg, spec)
     # workers=1: this process already initialized JAX; forking a solver
     # pool after that risks deadlock, and the reduced config only has a
     # handful of unique solves anyway.
-    net = optimize_network(list(work.layers), default_arch(), "miredo",
+    net = optimize_network(list(work.layers), arch, "miredo",
                            counts=list(work.counts),
                            per_layer_cap_s=budget_s, workers=1)
     print(f"\nCIM dataflow for {cfg.name} decode (batch={batch}): "
@@ -97,6 +105,22 @@ def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0):
     print("  spatial :", mp["spatial"])
     print("  temporal:", mp["temporal"])
     print("  dbl-buf :", mp["double_buf"])
+
+    # And actually RUN the served decode step's optimized plan on the
+    # Pallas kernels (interpret mode): every GEMM on matmul_int8 with
+    # mapping-derived blocks, the decode attention step on flash_attention
+    # against the KV cache, each invocation checked against its ref.py.
+    from repro.core.executor import execute_plan, lower_plan
+    plan = lower_plan(cfg, spec, net, arch)
+    rep = execute_plan(plan)
+    rank = f"{rep.rank_corr:.2f}" if rep.rank_corr is not None else "n/a"
+    print(f"measured execution: {rep.n_unique} unique kernels "
+          f"({rep.n_ops} ops), {rep.measured_total_s * 1e3:.1f} ms "
+          f"wall-clock vs {net.totals['cycles']:.3g} predicted cycles, "
+          f"rank corr {rank}, numerics "
+          f"{'OK' if rep.numerics_ok else 'FAILED'} "
+          f"(max rel err {rep.max_rel_err:.1e})")
+    assert rep.numerics_ok, "kernel output diverged from its ref oracle"
 
 
 if __name__ == "__main__":

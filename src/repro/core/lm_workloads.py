@@ -46,16 +46,19 @@ def attn_gemms(prefix: str, d_model: int, n_heads: int, n_kv_heads: int,
     K/V entirely (decode-time cross-attention reuses cached memory K/V).
     """
     kv_m = m if kv_m is None else kv_m
-    out: Emitted = [
-        (wl.gemm(f"{prefix}.wq", m, n_heads * head_dim, d_model), count),
-        (wl.gemm(f"{prefix}.wo", m, d_model, n_heads * head_dim), count),
+    att = wl.OP_ATTENTION    # executor: projections on matmul_int8, plus
+    out: Emitted = [         # one flash_attention score/AV op per block
+        (wl.gemm(f"{prefix}.wq", m, n_heads * head_dim, d_model, op=att),
+         count),
+        (wl.gemm(f"{prefix}.wo", m, d_model, n_heads * head_dim, op=att),
+         count),
     ]
     if kv_m:
         out += [
-            (wl.gemm(f"{prefix}.wk", kv_m, n_kv_heads * head_dim, d_model),
-             count),
-            (wl.gemm(f"{prefix}.wv", kv_m, n_kv_heads * head_dim, d_model),
-             count),
+            (wl.gemm(f"{prefix}.wk", kv_m, n_kv_heads * head_dim, d_model,
+                     op=att), count),
+            (wl.gemm(f"{prefix}.wv", kv_m, n_kv_heads * head_dim, d_model,
+                     op=att), count),
         ]
     return out
 
@@ -121,22 +124,27 @@ def ssd_gemms(prefix: str, d_model: int, *, expand: int, head_dim: int,
         (wl.gemm(f"{prefix}.in_proj", m, d_proj, d_model), count),
         (wl.gemm(f"{prefix}.out_proj", m, d_model, d_inner), count),
     ]
-    if decode:
+    ssd = wl.OP_SSD          # executor: scores+y_intra fused on ssd_scan,
+    if decode:               # state GEMMs on matmul_int8
         # m = batch of single-token sequences; state ops are per seq x head
         c = count * m * nh
         out += [
-            (wl.gemm(f"{prefix}.ssd_state_upd", state, head_dim, 1), c),
-            (wl.gemm(f"{prefix}.ssd_readout", 1, head_dim, state), c),
+            (wl.gemm(f"{prefix}.ssd_state_upd", state, head_dim, 1, op=ssd),
+             c),
+            (wl.gemm(f"{prefix}.ssd_readout", 1, head_dim, state, op=ssd),
+             c),
         ]
     else:
         q = min(chunk, m)
         nc = math.ceil(m / q)
         c = count * nc * nh
         out += [
-            (wl.gemm(f"{prefix}.ssd_scores", q, q, state), c),
-            (wl.gemm(f"{prefix}.ssd_y_intra", q, head_dim, q), c),
-            (wl.gemm(f"{prefix}.ssd_s_chunk", state, head_dim, q), c),
-            (wl.gemm(f"{prefix}.ssd_y_inter", q, head_dim, state), c),
+            (wl.gemm(f"{prefix}.ssd_scores", q, q, state, op=ssd), c),
+            (wl.gemm(f"{prefix}.ssd_y_intra", q, head_dim, q, op=ssd), c),
+            (wl.gemm(f"{prefix}.ssd_s_chunk", state, head_dim, q, op=ssd),
+             c),
+            (wl.gemm(f"{prefix}.ssd_y_inter", q, head_dim, state, op=ssd),
+             c),
         ]
     return out
 

@@ -274,6 +274,17 @@ class Schedule:
             "energy_delta_pj": self.energy_delta_pj,
         }
 
+    def stage_segment_ids(self) -> list[int]:
+        """Segment index of each stage in stream order. Stages are the
+        input layers of `schedule_network` in order and segments are
+        contiguous, so this is the layer-index -> segment map the
+        measured-execution backend (`core/executor.py`) uses to annotate
+        its ops with the segment that will execute them."""
+        out: list[int] = []
+        for i, seg in enumerate(self.segments):
+            out += [i] * len(seg.stages)
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Per-segment cost: core allocation (MIP + greedy water-filling fallback)

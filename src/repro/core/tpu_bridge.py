@@ -140,6 +140,65 @@ def select_matmul_blocks(m: int, k: int, n: int, *,
                        sol.status.name)
 
 
+def _snap(hint: int, dim: int, *, align: int, cap: int = 2048) -> int:
+    """Round a mapping tile extent up to MXU alignment and clamp it into
+    [align, min(cap, dim padded to alignment)]."""
+    padded = max(align, min(_round_up(dim, align), cap - cap % align))
+    return max(align, min(_round_up(hint, align), padded))
+
+
+def select_blocks_from_mapping(mapping, layer, arch, *,
+                               bytes_in: int = 1, bytes_acc: int = 4,
+                               vmem_bytes: int = VMEM_BYTES,
+                               cap: int = 2048) -> BlockChoice:
+    """Translate a solved MIREDO mapping into Pallas matmul block shapes.
+
+    The measured-execution backend (`core/executor.py`) runs each optimized
+    GEMM on kernels/matmul_int8; the block shapes come from the mapping the
+    MIP actually chose rather than from a fresh bridge MIP: a dim's on-chip
+    tile extent — spatial unrolls plus every temporal factor that *all*
+    operands indexing the dim hold above DRAM — is the working set MIREDO
+    decided to keep resident, i.e. the CIM analogue of the VMEM-resident
+    Pallas block. Each extent is snapped to MXU alignment (lane 128 /
+    sublane 8) and clamped to the padded dim; the working set is then
+    halved-down until the double-buffered eq. 9 capacity holds. Callers
+    zero-pad when a block does not divide the dim (kernels/matmul_int8/
+    ops.py), exactly as for `select_matmul_blocks` picks.
+
+    ``cap`` bounds every block dim; the measured-execution backend lowers
+    it so each op spans several grid steps (per-step wall-clock is the
+    measurement granularity — one giant block would time a single opaque
+    step).
+    """
+    from repro.core import workload as wl
+
+    m, k, n = layer.bound("N"), layer.bound("C"), layer.bound("K")
+    hints = {d: 1 for d in ("N", "C", "K")}
+    for ax in arch.spatial:
+        for d, f in mapping.spatial.get(ax.name, ()):
+            if d in hints:
+                hints[d] *= f
+    for i, (d, f) in enumerate(mapping.temporal):
+        if d in hints and all(
+                mapping.level_of[lam][i] >= 1
+                for lam in mapping.level_of if wl.is_relevant(d, lam)):
+            hints[d] *= f
+    bm = _snap(hints["N"], m, align=SUBLANE, cap=cap)
+    bk = _snap(hints["C"], k, align=LANE, cap=max(cap, LANE))
+    bn = _snap(hints["K"], n, align=LANE, cap=max(cap, LANE))
+    ws = lambda: bm * bk * bytes_in + bk * bn * bytes_in + bm * bn * bytes_acc
+    while 2 * ws() > vmem_bytes:      # pipelined (double-buffered) eq. 9
+        if bm >= max(bk, bn) and bm > SUBLANE:
+            bm = max(SUBLANE, bm // 2 - bm // 2 % SUBLANE)
+        elif bk >= bn and bk > LANE:
+            bk = max(LANE, bk // 2 - bk // 2 % LANE)
+        elif bn > LANE:
+            bn = max(LANE, bn // 2 - bn // 2 % LANE)
+        else:
+            break
+    return BlockChoice(bm, bk, bn, True, math.nan, ws(), "MAPPED")
+
+
 def select_flash_blocks(seq_q: int, seq_k: int, head_dim: int, *,
                         bytes_el: int = 2,
                         vmem_bytes: int = VMEM_BYTES) -> tuple[int, int]:

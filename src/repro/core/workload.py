@@ -46,15 +46,36 @@ def is_relevant(dim: str, operand: str) -> bool:
     return dim in RELEVANT[operand]
 
 
+# Op kinds: which kernel primitive executes a layer on the measured-execution
+# backend (`core/executor.py`). Every layer is still the same canonical loop
+# nest for the MIP/latency stack; the kind only routes *execution*:
+#   OP_GEMM      -> kernels/matmul_int8 (the CIM MVM primitive)
+#   OP_ATTENTION -> attention projections; the executor additionally runs the
+#                   score/AV stage on kernels/flash_attention per block
+#   OP_SSD       -> SSD duality matmuls; the intra-chunk pair runs fused on
+#                   kernels/ssd_scan, the state GEMMs on matmul_int8
+OP_GEMM = "gemm"
+OP_ATTENTION = "attention"
+OP_SSD = "ssd"
+OP_KINDS = (OP_GEMM, OP_ATTENTION, OP_SSD)
+
+
 @dataclasses.dataclass(frozen=True)
 class Layer:
-    """One operator instance = loop bounds + stride + name."""
+    """One operator instance = loop bounds + stride + name (+ op kind).
+
+    ``op`` tags the kernel family that executes this layer
+    (`core/executor.py`); it is display/dispatch metadata like ``name`` —
+    structural identity (`cache.layer_cache_key`, network dedup) covers
+    loop bounds and stride only."""
 
     name: str
     dims: TMapping[str, int]  # bound per canonical dim (>=1)
     stride: int = 1
+    op: str = OP_GEMM
 
     def __post_init__(self):
+        assert self.op in OP_KINDS, (self.name, self.op)
         for d in DIMS:
             assert self.dims.get(d, 1) >= 1, (self.name, d)
 
@@ -99,9 +120,10 @@ def conv(name: str, n: int, k: int, c: int, oy: int, ox: int,
                         "FY": fy, "FX": fx}, stride)
 
 
-def gemm(name: str, m: int, n_out: int, k_red: int) -> Layer:
+def gemm(name: str, m: int, n_out: int, k_red: int,
+         op: str = OP_GEMM) -> Layer:
     """(m x k_red) @ (k_red x n_out)."""
-    return Layer(name, {"N": m, "K": n_out, "C": k_red})
+    return Layer(name, {"N": m, "K": n_out, "C": k_red}, op=op)
 
 
 # ---------------------------------------------------------------------------

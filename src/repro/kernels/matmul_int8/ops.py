@@ -42,6 +42,23 @@ def quantized_matmul(x: jax.Array, w: jax.Array, *,
     return out[:m, :n]
 
 
+def quantized_matmul_and_ref(x: jax.Array, w: jax.Array, *,
+                             block_shapes: tuple[int, int, int] | None = None,
+                             interpret: bool = True,
+                             out_dtype=jnp.float32
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Kernel and pure-jnp oracle on identical quantized operands.
+
+    The measured-execution backend (`core/executor.py`) checks every kernel
+    invocation against its ``ref.py``; both paths quantize the same way, so
+    the int32 accumulations are bit-identical and only the final scale
+    multiply can differ by float rounding. Returns ``(kernel, ref)``."""
+    out = quantized_matmul(x, w, block_shapes=block_shapes, use_kernel=True,
+                           interpret=interpret, out_dtype=out_dtype)
+    ref = quantized_matmul(x, w, use_kernel=False, out_dtype=out_dtype)
+    return out, ref
+
+
 def default_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
     def pick(d, pref):
         for b in (pref, 512, 256, 128, 64, 32, 16, 8):

@@ -20,3 +20,15 @@ def ssd_intra_chunk(c: jax.Array, b: jax.Array, s: jax.Array,
     y = ssd_intra_chunk_bh(f5(c), f5(b), f4(s), f4(dt), f5(x),
                            interpret=interpret)
     return y.reshape(bsz, nc, h, q, p).transpose(0, 1, 3, 2, 4)
+
+
+def ssd_intra_chunk_and_ref(c: jax.Array, b: jax.Array, s: jax.Array,
+                            dt: jax.Array, x: jax.Array, *,
+                            interpret: bool = True
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Kernel and pure-jnp oracle on identical inputs — the executor's
+    per-invocation numerics check (`core/executor.py`). Returns
+    ``(kernel, ref)``."""
+    from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
+    return (ssd_intra_chunk(c, b, s, dt, x, interpret=interpret),
+            ssd_intra_chunk_ref(c, b, s, dt, x))

@@ -72,6 +72,52 @@ def test_quantized_matmul_bridge_padded_blocks():
     assert rel < 0.03, rel
 
 
+@pytest.mark.parametrize("m,k,n", [(100, 200, 360), (8, 72, 100),
+                                   (130, 24, 1000)])
+def test_matmul_bridge_candidate_blocks_padded(m, k, n):
+    """Golden numerics on dims with no MXU-aligned divisor: every bridge
+    candidate pick must run through the kernel's zero-padding path and
+    match the fp oracle (the executor's matmul dispatch contract)."""
+    from repro.core.tpu_bridge import select_matmul_blocks
+    c = select_matmul_blocks(m, k, n)
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)) * 0.1, jnp.float32)
+    out = quantized_matmul(x, w, block_shapes=(c.bm, c.bk, c.bn),
+                           use_kernel=True, interpret=True,
+                           out_dtype=jnp.float32)
+    assert out.shape == (m, n)
+    exact = x @ w
+    rel = np.linalg.norm(np.asarray(out) - np.asarray(exact)) / \
+        np.linalg.norm(np.asarray(exact))
+    assert rel < 0.03, rel
+
+
+def test_matmul_mapping_derived_blocks():
+    """Blocks derived from an optimized CIM mapping
+    (`tpu_bridge.select_blocks_from_mapping`) are MXU-legal, capped, and
+    numerically exact vs the int8 oracle on identical quantized operands."""
+    from repro.core.arch import default_arch
+    from repro.core.baselines import greedy_mapping
+    from repro.core.tpu_bridge import select_blocks_from_mapping
+    from repro.core.workload import gemm
+    from repro.kernels.matmul_int8.ops import quantized_matmul_and_ref
+    arch = default_arch()
+    layer = gemm("t.g", 96, 360, 200)       # (96 x 200) @ (200 x 360)
+    mp = greedy_mapping(layer, arch)
+    c = select_blocks_from_mapping(mp, layer, arch, cap=128)
+    assert c.bm % 8 == 0 and c.bk % 128 == 0 and c.bn % 128 == 0
+    assert max(c.bm, c.bk, c.bn) <= 256    # cap + alignment floor
+    assert 2 * c.vmem_bytes <= 64 * 1024 * 1024
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.standard_normal((96, 200)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((200, 360)) * 0.1, jnp.float32)
+    out, ref = quantized_matmul_and_ref(x, w,
+                                        block_shapes=(c.bm, c.bk, c.bn))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_quantize_roundtrip():
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.standard_normal((16, 32)), jnp.float32)
@@ -116,6 +162,38 @@ def test_flash_attention_dtypes(dtype):
         rtol=tol, atol=tol)
 
 
+def test_flash_attention_legal_block_clamp():
+    """Sequence lengths that are not 128-multiples (VLM prefill = text +
+    patch tokens) must clamp the requested blocks to exact divisors instead
+    of tripping the kernel's tiling assert."""
+    from repro.kernels.flash_attention.ops import legal_block
+    assert legal_block(264, 256) == 88           # largest 8-aligned divisor
+    assert legal_block(96, 128) == 96
+    assert legal_block(1, 128) == 1              # decode step (lq = 1)
+    assert legal_block(7, 256) == 7              # no aligned divisor at all
+    rng = np.random.default_rng(10)
+    q = jnp.asarray(rng.standard_normal((1, 264, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 264, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 264, 2, 16)), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_decode_step_vs_cache():
+    """The executor's decode dispatch: one query step (lq=1) against a
+    longer KV cache, non-causal."""
+    rng = np.random.default_rng(11)
+    q = jnp.asarray(rng.standard_normal((4, 1, 2, 16)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((4, 256, 2, 16)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((4, 256, 2, 16)), jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # ssd intra-chunk
 # ---------------------------------------------------------------------------
@@ -133,6 +211,23 @@ def test_ssd_intra_chunk_vs_ref(q, h, n, p):
     x = jnp.asarray(rng.standard_normal((b, nc, q, h, p)), jnp.float32)
     out = ssd_intra_chunk(c, bb, s, dt, x, interpret=True)
     ref = ssd_intra_chunk_ref(c, bb, s, dt, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_intra_chunk_and_ref_helper():
+    """The executor's fused SSD dispatch (`ssd_intra_chunk_and_ref`) on an
+    odd chunk length: kernel and oracle on identical inputs."""
+    from repro.kernels.ssd_scan.ops import ssd_intra_chunk_and_ref
+    rng = np.random.default_rng(12)
+    b, nc, q, h, n, p = 1, 1, 24, 1, 8, 8
+    c = jnp.asarray(rng.standard_normal((b, nc, q, h, n)), jnp.float32)
+    bb = jnp.asarray(rng.standard_normal((b, nc, q, h, n)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, nc, q, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 4.0, (h,)), jnp.float32)
+    s = jnp.cumsum(dt * a, axis=2)
+    x = jnp.asarray(rng.standard_normal((b, nc, q, h, p)), jnp.float32)
+    out, ref = ssd_intra_chunk_and_ref(c, bb, s, dt, x, interpret=True)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                rtol=2e-4, atol=2e-4)
 

@@ -84,6 +84,43 @@ def test_mode_switch_costs_show_up():
     assert evaluate(mp, layer, quiet).total_cycles <= base
 
 
+def test_differential_random_layer_sweep():
+    """Differential sweep: `latency.evaluate` vs the event-simulator replay
+    on *randomized* single layers (GEMMs across the LM-shape range plus
+    random convs), gated at the Fig. 4(a) 0.8 tolerance —
+    `test_simulator_agreement` pins one conv, this sweeps the shapes the
+    measured-execution backend (`core/executor.py`) ranks against."""
+    rng = random.Random(7)
+    accs = []
+    tried = 0
+    while len(accs) < 12 and tried < 300:
+        tried += 1
+        if rng.random() < 0.6:
+            layer = gemm("d.gemm", rng.choice([1, 8, 32, 100, 256]),
+                         rng.choice([16, 64, 360, 1024]),
+                         rng.choice([16, 64, 200]))
+        else:
+            hw = rng.choice([7, 14])
+            layer = conv("d.conv", 1, rng.choice([16, 64]),
+                         rng.choice([16, 64]), hw, hw, 3, 3)
+        if rng.random() < 0.4:
+            mp = greedy_mapping(layer, ARCH)
+        else:
+            factors = factorize_layer_dims(
+                {d: layer.bound(d) for d in DIMS})
+            mp = _sample_mapping(layer, ARCH, rng, factors)
+            if mp is None:
+                continue
+        iters = math.prod(f for _, f in mp.temporal)
+        if iters > 60_000:
+            continue
+        model = evaluate(mp, layer, ARCH).total_cycles
+        sim = simulate(mp, layer, ARCH).total_cycles
+        accs.append(1 - abs(model - sim) / max(sim, 1))
+    assert len(accs) >= 10, "sweep failed to draw enough replayable points"
+    assert sum(accs) / len(accs) > 0.8, accs
+
+
 def test_energy_positive_and_layered():
     layer = conv("c", 1, 64, 64, 14, 14, 3, 3)
     mp = greedy_mapping(layer, ARCH)

@@ -1,0 +1,155 @@
+"""Property-based mapping-legality fuzz: random layers x random archs ->
+every mapping returned by the baselines and the MIP satisfies the
+buffer-capacity (eq. 9) and spatial-legality (C^X) constraints.
+
+Runs under ``hypothesis`` when available; otherwise a seeded-random
+strategy shim (the tier-1 fallback pattern from
+``tests/test_factorization.py``) so the suite collects on a bare
+environment. The assertions re-derive eq. 9 and the spatial checks
+directly from the mapping — independently of ``validate``'s bookkeeping —
+and also require ``validate`` itself to come back clean.
+"""
+
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # seeded fallback
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(lambda rng: rng.choice(list(seq)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(fn, "_max_examples", 25)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+from repro.core import workload as wl
+from repro.core.arch import OPERANDS, default_arch
+from repro.core.baselines import greedy_mapping, heuristic_search
+from repro.core.mapping import validate
+
+#: Small arch grid spanning the knobs that move the constraints: core
+#: count, macro geometry (spatial legality), buffer capacities (eq. 9) and
+#: the double-buffering policy (the (1 + psi^DM) multiplier).
+ARCHS = (
+    default_arch(),
+    default_arch(n_cores=2, macro_rows=64, macro_cols=16, gbuf_kb=2.0,
+                 lbuf_kb=8.0, name="fuzz-tiny"),
+    default_arch(double_buffered=False, name="fuzz-single-buf"),
+    default_arch(n_cores=4, macro_rows=256, macro_cols=64, lbuf_kb=16.0,
+                 reg_bytes=512, name="fuzz-wide"),
+)
+
+DIM_CHOICES = (1, 3, 8, 24, 100, 128, 360, 1000)
+
+
+def _layer(kind: int, a: int, b: int, c: int) -> wl.Layer:
+    if kind == 0:
+        return wl.gemm("fz.gemm", a, b, c)
+    return wl.conv("fz.conv", 1, a, c, min(b, 28), min(b, 28), 3, 3)
+
+
+def assert_legal(mp, layer, arch):
+    """Independent re-derivation of the legality contract."""
+    assert validate(mp, layer, arch) == [], validate(mp, layer, arch)
+    # (2) factor products reconstruct every loop bound
+    for d in wl.DIMS:
+        prod = math.prod(f for dd, f in mp.temporal if dd == d)
+        for ax in arch.spatial:
+            prod *= mp.spatial_extent(ax.name, d)
+        assert prod == layer.bound(d), (d, prod, layer.bound(d))
+    # C^X spatial legality: axis dim membership + physical lane budget
+    for ax in arch.spatial:
+        assert mp.spatial_extent(ax.name) <= ax.size
+        for d, _f in mp.spatial.get(ax.name, ()):
+            assert d in ax.dims, (ax.name, d)
+    # eq. (9): (1 + psi^DM) x stored bytes within (aggregated) capacity,
+    # summed across operands at shared levels, per operand otherwise
+    for m in range(arch.n_levels):
+        cap = mp.eff_capacity(arch, m)
+        if cap is None:
+            continue
+        sizes = {}
+        for lam in OPERANDS:
+            if m not in mp.used_levels(lam) or not arch.serves(m, lam):
+                continue
+            mult = 2 if mp.is_double_buffered(lam, m, arch) else 1
+            sizes[lam] = mult * mp.stored_bytes(layer, lam, arch, m)
+        if arch.level(m).shared:
+            assert sum(sizes.values()) <= cap + 1e-6
+        else:
+            for s in sizes.values():
+                assert s <= cap + 1e-6
+    # weights physically terminate in the macro (in-situ compute) whenever
+    # any temporal slot exists
+    if mp.n_slots():
+        assert mp.deepest_used("W") <= arch.macro_level
+
+
+@given(st.integers(0, 1),
+       st.sampled_from(DIM_CHOICES), st.sampled_from(DIM_CHOICES),
+       st.sampled_from(DIM_CHOICES), st.integers(0, len(ARCHS) - 1),
+       st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_fuzz_greedy_and_heuristic_legal(kind, a, b, c, ai, seed):
+    layer = _layer(kind, a, b, c)
+    arch = ARCHS[ai]
+    assert_legal(greedy_mapping(layer, arch), layer, arch)
+    res = heuristic_search(layer, arch, budget=40, seed=seed)
+    assert_legal(res.mapping, layer, arch)
+    # the accurate re-score the search reports must be the evaluator's
+    from repro.core.latency import evaluate
+    assert res.eval_latency == pytest.approx(
+        evaluate(res.mapping, layer, arch).total_cycles)
+
+
+@given(st.integers(0, 1),
+       st.sampled_from(DIM_CHOICES), st.sampled_from(DIM_CHOICES),
+       st.sampled_from(DIM_CHOICES), st.integers(0, len(ARCHS) - 1),
+       st.booleans())
+@settings(max_examples=4, deadline=None)
+def test_fuzz_mip_legal(kind, a, b, c, ai, ws):
+    """The time-capped MIP (plain and weight-stationary) never returns an
+    infeasible mapping — the warm-start contract, fuzzed."""
+    from repro.core.formulation import FormulationConfig, optimize_layer
+    layer = _layer(kind, a, b, c)
+    arch = ARCHS[ai]
+    cfg = FormulationConfig(time_limit_s=1.0, weight_stationary=ws)
+    res = optimize_layer(layer, arch, cfg)
+    assert res.mapping is not None, res.status
+    assert_legal(res.mapping, layer, arch)
