@@ -1,0 +1,240 @@
+"""Optimizer throughput benchmark (the ``optspeed`` job): scalar vs
+batched analytical model, plus the persistent-cache DSE speedup.
+
+Three measurements, one JSON row (``reports/benchmarks/opt_speed.json``):
+
+  1. **mappings/sec** on sampler pools (one GEMM, one conv): the historical
+     per-candidate scalar loop (``mapping.validate`` +
+     ``energy.evaluate_edp``) against the batched scorer
+     (`latency_batched.score_mappings`) on each available backend. Before
+     timing, the batched scores are checked for *exact* equality with the
+     scalar loop on every feasible row (infeasible rows must come back
+     ``inf``) — a speedup that changes answers is a bug, not a result.
+  2. the same race on a **feasible-only** pool, isolating evaluation
+     throughput from the sampler's ~90% capacity-infeasible candidates
+     (which the scalar loop rejects cheaply in ``validate``).
+  3. optionally (``--dse``): a cold then warm ``dse --reduced`` run against
+     a fresh persistent cache directory — the warm run must reproduce the
+     cold frontier byte-for-byte and beat its wall clock by
+     ``DSE_MIN_SPEEDUP``x (the ISSUE-6 acceptance number).
+
+The throughput gate (used by the CI optspeed-smoke job) requires the best
+batched/scalar ratio across pools to reach ``MIN_RATIO`` — timings use
+best-of-``REPEATS`` to shrug off scheduler noise on small CI boxes.
+
+    PYTHONPATH=src python benchmarks/opt_speed.py --quick
+    PYTHONPATH=src python benchmarks/opt_speed.py --dse
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import os
+import random
+import sys
+import time
+
+if __package__ in (None, ""):      # `python benchmarks/opt_speed.py`
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+from benchmarks.common import md_table, write_report
+from repro.core import latency_batched as lb
+from repro.core import workload as wl
+from repro.core.arch import default_arch
+from repro.core.baselines import sample_mapping_raw
+from repro.core.energy import evaluate_edp
+from repro.core.factorization import factorize_layer_dims
+from repro.core.mapping import validate
+
+#: Throughput gate: best batched/scalar ratio across pools/backends. 1.0
+#: ("no slower than the loop it replaced") — measured margins are
+#: 1.2-1.3x on the feasible-only pool, but a single shared CI core is
+#: noisy, so the gate asserts parity and the JSON records the margin.
+MIN_RATIO = 1.0
+#: Cold/warm wall-clock ratio the persistent-cache DSE rerun must reach.
+DSE_MIN_SPEEDUP = 5.0
+#: Best-of-N timing repeats.
+REPEATS = 3
+
+
+def _pools(quick: bool) -> list[tuple[str, object, int]]:
+    """(name, layer, pool size): one GEMM and one conv, sized so the jax
+    backend crosses its auto-dispatch threshold even in quick mode."""
+    n = 512 if quick else 2000
+    return [
+        ("gemm", wl.gemm("g", 32, 512, 512), n),
+        ("conv", wl.conv("c", 1, 64, 64, 28, 28, 3, 3), n),
+    ]
+
+
+def _sample_pool(layer, arch, n: int, seed: int = 0) -> list:
+    rng = random.Random(seed)
+    factors = factorize_layer_dims({d: layer.bound(d) for d in wl.DIMS})
+    return [sample_mapping_raw(layer, arch, rng, factors)
+            for _ in range(n)]
+
+
+def _scalar_scores(pool, layer, arch) -> list[tuple[float, float, float]]:
+    """The historical per-candidate loop: validate, then full EDP."""
+    out = []
+    for mp in pool:
+        if validate(mp, layer, arch):
+            out.append((math.inf, math.inf, math.inf))
+        else:
+            e = evaluate_edp(mp, layer, arch)
+            out.append((e.latency.total_cycles, e.energy.total_pj, e.edp))
+    return out
+
+
+def _best_of(fn, repeats: int = REPEATS) -> float:
+    best = math.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _check_agreement(pool, layer, arch, name: str) -> int:
+    """Exact scalar/batched equality on every row; returns feasible count."""
+    ref = _scalar_scores(pool, layer, arch)
+    for backend in ("numpy",) + (("jax",) if lb.HAVE_JAX else ()):
+        sc = lb.score_mappings(pool, layer, arch, backend=backend)
+        for i, (cyc, pj, edp) in enumerate(ref):
+            got = (float(sc.cycles[i]), float(sc.energy_pj[i]),
+                   float(sc.edp[i]))
+            if got != (cyc, pj, edp):
+                raise RuntimeError(
+                    f"[optspeed] {name}/{backend} row {i}: batched {got} "
+                    f"!= scalar {(cyc, pj, edp)}")
+    return sum(r[0] != math.inf for r in ref)
+
+
+def _race(pool, layer, arch) -> dict[str, float]:
+    """Best-of-N wall seconds per contender on one pool."""
+    need = ("feasible", "latency", "energy")
+    out = {"scalar": _best_of(lambda: _scalar_scores(pool, layer, arch)),
+           "batched-numpy": _best_of(lambda: lb.score_mappings(
+               pool, layer, arch, need=need, backend="numpy"))}
+    if lb.HAVE_JAX:
+        # warm the jit cache before timing: compile time is a one-off
+        lb.score_mappings(pool, layer, arch, need=need, backend="jax")
+        out["batched-jax"] = _best_of(lambda: lb.score_mappings(
+            pool, layer, arch, need=need, backend="jax"))
+    return out
+
+
+def _dse_cold_warm(cache_dir: str) -> dict:
+    """Cold vs warm ``dse --reduced`` against one persistent cache dir."""
+    from benchmarks import dse_pareto
+
+    def frontier(payload):
+        return [(p["arch"], p["cycles"], p["energy_pj"], p["area_bits"])
+                for p in payload["frontier"]]
+
+    prev = os.environ.get("MIREDO_CACHE")
+    os.environ["MIREDO_CACHE"] = cache_dir
+    try:
+        t0 = time.perf_counter()
+        cold = dse_pareto.run(reduced=True)
+        cold_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        warm = dse_pareto.run(reduced=True)
+        warm_s = time.perf_counter() - t0
+    finally:
+        if prev is None:
+            os.environ.pop("MIREDO_CACHE", None)
+        else:
+            os.environ["MIREDO_CACHE"] = prev
+    if frontier(cold) != frontier(warm):
+        raise RuntimeError(
+            f"[optspeed] warm DSE rerun changed the frontier:\n"
+            f"cold: {frontier(cold)}\nwarm: {frontier(warm)}")
+    speedup = cold_s / max(warm_s, 1e-9)
+    if speedup < DSE_MIN_SPEEDUP:
+        raise RuntimeError(
+            f"[optspeed] persistent-cache DSE rerun only {speedup:.1f}x "
+            f"faster (acceptance: >={DSE_MIN_SPEEDUP:g}x)")
+    return {"cold_s": round(cold_s, 2), "warm_s": round(warm_s, 2),
+            "speedup": round(speedup, 1),
+            "frontier_identical": True,
+            "frontier_archs": [p["arch"] for p in cold["frontier"]]}
+
+
+def run(budget_s: float = 0.0, quick: bool = False, dse: bool = False,
+        cache_dir: str | None = None) -> dict:
+    """``budget_s`` is accepted for harness uniformity; the pools are
+    fixed-size so the job's cost is set by ``quick`` and ``dse``."""
+    arch = default_arch()
+    rows, pools_json = [], {}
+    best_ratio, best_where = 0.0, ""
+    for name, layer, n in _pools(quick):
+        pool = _sample_pool(layer, arch, n)
+        feas = _check_agreement(pool[: min(n, 256)], layer, arch, name)
+        # feasible-only variant: evaluation throughput without the
+        # sampler's capacity-infeasible majority
+        fpool = [mp for mp in pool if not validate(mp, layer, arch)]
+        for tag, p in ((name, pool), (f"{name}-feasible", fpool)):
+            if not p:
+                continue
+            t = _race(p, layer, arch)
+            entry = {"pool": len(p), "scalar_s": round(t["scalar"], 4)}
+            for k, v in t.items():
+                if k == "scalar":
+                    continue
+                ratio = t["scalar"] / v
+                entry[k.replace("-", "_") + "_s"] = round(v, 4)
+                entry[k.replace("-", "_") + "_ratio"] = round(ratio, 3)
+                if ratio > best_ratio:
+                    best_ratio, best_where = ratio, f"{tag}/{k}"
+                rows.append([tag, k, len(p),
+                             round(len(p) / t["scalar"]),
+                             round(len(p) / v), f"{ratio:.2f}x"])
+            pools_json[tag] = entry
+        print(f"[optspeed] {name}: agreement exact on "
+              f"{min(n, 256)} rows ({feas} feasible)")
+
+    print(md_table(["pool", "backend", "n", "scalar maps/s",
+                    "batched maps/s", "ratio"], rows))
+    print(f"[optspeed] best batched/scalar ratio {best_ratio:.2f}x "
+          f"({best_where}); gate >={MIN_RATIO:g}x")
+    if best_ratio < MIN_RATIO:
+        raise RuntimeError(
+            f"[optspeed] batched scorer slower than scalar everywhere "
+            f"(best {best_ratio:.2f}x < {MIN_RATIO:g}x)")
+
+    payload = {"have_jax": lb.HAVE_JAX, "quick": quick,
+               "agreement": "exact", "pools": pools_json,
+               "best_ratio": round(best_ratio, 3),
+               "best_ratio_pool": best_where}
+    if dse:
+        import tempfile
+        cd = cache_dir or tempfile.mkdtemp(prefix="optspeed-cache-")
+        print(f"[optspeed] cold/warm dse --reduced, cache {cd}")
+        payload["dse"] = _dse_cold_warm(cd)
+        print(f"[optspeed] dse cold {payload['dse']['cold_s']}s -> warm "
+              f"{payload['dse']['warm_s']}s "
+              f"({payload['dse']['speedup']}x, frontier identical)")
+    write_report("opt_speed", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller pools (CI smoke size)")
+    ap.add_argument("--dse", action="store_true",
+                    help="also time cold vs warm dse --reduced against a "
+                         "persistent cache (minutes, not seconds)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent cache dir for --dse (default: fresh "
+                         "temp dir, i.e. a true cold start)")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, dse=args.dse, cache_dir=args.cache_dir)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -8,13 +8,16 @@ dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``), the
 ``benchmarks/sched_lm.py``) and the ``exec`` job (optimized plans executed
 on the Pallas kernels, predicted vs measured, ``benchmarks/exec_lm.py``).
 ``--quick`` trims solve budgets; results cache under reports/cache so
-reruns are incremental. Unknown ``--only`` names fail the run — a typo
+reruns are incremental, and ``--cache-dir`` points the solve-record cache
+at a persistent location shared across runs/machines (equivalent to
+setting ``MIREDO_CACHE``). Unknown ``--only`` names fail the run — a typo
 must not produce an empty, green harness.
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 import traceback
 
@@ -24,15 +27,25 @@ def main(argv=None):
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm,dse,sched,exec")
+                         "flexfact,bridge,lm,dse,sched,exec,optspeed")
+    ap.add_argument("--cache-dir", default="",
+                    help="persistent solve-record cache directory (sets "
+                         "MIREDO_CACHE; default reports/cache)")
     args = ap.parse_args(argv)
+    if args.cache_dir:
+        # Every ResultCache() resolves its directory through
+        # cache.default_cache_dir(), which reads MIREDO_CACHE — setting it
+        # here routes all jobs (including process-pool workers, which
+        # inherit the environment) at the shared store.
+        os.environ["MIREDO_CACHE"] = args.cache_dir
     budget = 20.0 if args.quick else 60.0
     only = set(filter(None, args.only.split(","))) if args.only else None
 
     from benchmarks import (dse_pareto, exec_lm, fig4a_model_accuracy,
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
-                            sched_lm, tab_flexfact, tpu_bridge_bench)
+                            opt_speed, sched_lm, tab_flexfact,
+                            tpu_bridge_bench)
 
     jobs = [
         ("fig4a", lambda: fig4a_model_accuracy.run(
@@ -55,6 +68,9 @@ def main(argv=None):
         # (benchmarks/exec_lm.py --no-interpret), not a harness target.
         ("exec", lambda: exec_lm.run(budget_s=budget, quick=args.quick,
                                      reduced=True)),
+        # scalar-vs-batched throughput race + exact-agreement check; the
+        # cold/warm DSE timing is its standalone --dse flag (minutes).
+        ("optspeed", lambda: opt_speed.run(quick=args.quick)),
     ]
     # A typo'd --only used to run zero jobs and still print "All benchmarks
     # complete" with exit 0 — validate against the job list instead.

@@ -59,10 +59,13 @@ def _assign_levels(temporal: list[tuple[str, int]], layer: wl.Layer,
                 size = probe.stored_bytes(layer, lam, arch, cur)
                 mult = 2 if probe.is_double_buffered(lam, cur, arch) else 1
                 lvl = arch.level(cur)
-                budget = cap if cap is None else \
-                    (cap if lvl.shared else cap)
-                if budget is None or mult * size <= budget / \
-                        (len(lvl.serves) if lvl.shared else 1):
+                # Shared levels budget a fair share per served operand (the
+                # sweep places one operand at a time, so the full capacity
+                # would over-commit a level that must later hold all three);
+                # dedicated levels grant their full per-operand capacity.
+                budget = None if cap is None else \
+                    (cap / len(lvl.serves) if lvl.shared else cap)
+                if budget is None or mult * size <= budget:
                     break
                 outer = [mm for mm in legal if mm < cur]
                 if not outer:
@@ -124,8 +127,15 @@ def greedy_mapping(layer: wl.Layer, arch: CimArch,
 # Stochastic mappers
 # ---------------------------------------------------------------------------
 
-def _sample_mapping(layer: wl.Layer, arch: CimArch, rng: random.Random,
-                    factors: dict[str, list[int]]) -> Mapping | None:
+def sample_mapping_raw(layer: wl.Layer, arch: CimArch, rng: random.Random,
+                       factors: dict[str, list[int]]) -> Mapping:
+    """One random uneven mapping, *not* validated. By construction the
+    candidate satisfies every structural constraint (complete factor
+    products, spatial axis membership and lane budgets, monotone per-operand
+    level assignment, C^M legality, weights terminating in the macro) — the
+    only clause it can still violate is the eq. (9) buffer capacity, which
+    the batched scorer checks for the whole pool in one dispatch
+    (`latency_batched.score_mappings(...).feasible`)."""
     pool: list[tuple[str, int]] = []
     for d, fs in sorted(factors.items()):
         pool += [(d, f) for f in fs]
@@ -171,9 +181,15 @@ def _sample_mapping(layer: wl.Layer, arch: CimArch, rng: random.Random,
             if arch.level(mm).double_bufferable and mm != arch.macro_level \
                     and rng.random() < 0.5:
                 dbuf.add((lam, mm))
-    mp = Mapping(spatial={k: tuple(v) for k, v in spatial.items()},
-                 temporal=tuple(temporal), level_of=level_of,
-                 double_buf=frozenset(dbuf))
+    return Mapping(spatial={k: tuple(v) for k, v in spatial.items()},
+                   temporal=tuple(temporal), level_of=level_of,
+                   double_buf=frozenset(dbuf))
+
+
+def _sample_mapping(layer: wl.Layer, arch: CimArch, rng: random.Random,
+                    factors: dict[str, list[int]]) -> Mapping | None:
+    """Validated variant of `sample_mapping_raw` (None = infeasible)."""
+    mp = sample_mapping_raw(layer, arch, rng, factors)
     return mp if not validate(mp, layer, arch) else None
 
 
@@ -188,24 +204,35 @@ class SearchResult:
 
 def heuristic_search(layer: wl.Layer, arch: CimArch, budget: int = 2000,
                      seed: int = 0, accurate: bool = False,
-                     k_min: int = 3, alpha: float = 0.15) -> SearchResult:
+                     k_min: int = 3, alpha: float = 0.15,
+                     backend: str | None = None) -> SearchResult:
     """ZigZag-style mapper. ``accurate=False`` ranks candidates with the
     idealized perfect-overlap model (the strawman the paper criticizes);
-    ``accurate=True`` ranks with the full analytical model (ablation)."""
+    ``accurate=True`` ranks with the full analytical model (ablation).
+
+    Enumerate-then-score: the whole candidate pool is sampled up front and
+    ranked in one batched dispatch (`latency_batched.score_mappings` —
+    bit-equal to the scalar oracle, so the winner, its cost and the
+    feasible count are identical to the historical per-candidate loop).
+    ``backend`` forwards to the batched scorer ("jax"/"numpy"/auto)."""
+    import numpy as np
+
+    from repro.core import latency_batched as lb
+
     rng = random.Random(seed)
     factors = factorize_layer_dims({d: layer.bound(d) for d in wl.DIMS},
                                    alpha=alpha, k_min=k_min)
+    cands = [sample_mapping_raw(layer, arch, rng, factors)
+             for _ in range(budget)]
+    need = ("feasible", "latency") if accurate else ("feasible", "ideal")
+    sc = lb.score_mappings(cands, layer, arch, need=need, backend=backend)
     best, best_cost = None, math.inf
-    feas = 0
-    for _ in range(budget):
-        mp = _sample_mapping(layer, arch, rng, factors)
-        if mp is None:
-            continue
-        feas += 1
-        cost = (evaluate(mp, layer, arch).total_cycles if accurate
-                else idealized_cycles(mp, layer, arch))
-        if cost < best_cost:
-            best, best_cost = mp, cost
+    feas = int(sc.feasible.sum()) if budget else 0
+    if feas:
+        cost = np.where(sc.feasible,
+                        sc.cycles if accurate else sc.idealized, math.inf)
+        idx = int(np.argmin(cost))   # first minimum = first strict improver
+        best, best_cost = cands[idx], float(cost[idx])
     if best is None:
         best = greedy_mapping(layer, arch)
         best_cost = idealized_cycles(best, layer, arch)

@@ -45,7 +45,15 @@ from repro.core.mapping import Mapping
 #     pre-scheduler v3 entries predate that contract, so the version bump
 #     retires them wholesale rather than letting them serve records the
 #     scheduler was never validated against.
-CACHE_VERSION = 4
+# v5: the key space grows an optional warm-start digest component
+#     (incremental DSE re-solves inject a neighboring arch's solved mapping
+#     as an extra incumbent — `solve_record_key(..., warm_start=...)`), and
+#     the cache is now routinely shared across runs on disk
+#     (``--cache-dir`` / ``MIREDO_CACHE``). v4 records were written before
+#     warm-started and cold solves could coexist, so the bump draws a clean
+#     line: every v5 record states via its key whether a warm start shaped
+#     it. Cold-solve keys are otherwise structurally identical to v4.
+CACHE_VERSION = 5
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -121,11 +129,19 @@ def config_cache_key(cfg) -> str:
     return _digest("|".join(f"{k}={v!r}" for k, v in items))
 
 
-def solve_record_key(mode: str, layer: wl.Layer, arch: CimArch, cfg) -> str:
+def solve_record_key(mode: str, layer: wl.Layer, arch: CimArch, cfg,
+                     warm_start: dict | None = None) -> str:
+    """``warm_start`` (a mapping JSON injected as a neighbor incumbent —
+    incremental DSE re-solves) changes the solver's inputs, so warm-started
+    records carry an extra digest component: they can never serve, or be
+    served by, the structural key of an independent cold solve."""
     if mode not in MIP_MODES:
         cfg = dataclasses.replace(cfg, **_NON_MIP_CANONICAL)
-    return (f"v{CACHE_VERSION}__{mode}__{layer_cache_key(layer)}"
-            f"__{arch_cache_key(arch)}__{config_cache_key(cfg)}")
+    key = (f"v{CACHE_VERSION}__{mode}__{layer_cache_key(layer)}"
+           f"__{arch_cache_key(arch)}__{config_cache_key(cfg)}")
+    if warm_start is not None:
+        key += "__ws" + _digest(json.dumps(warm_start, sort_keys=True))
+    return key
 
 
 # ---------------------------------------------------------------------------
@@ -166,27 +182,31 @@ class ResultCache:
 # ---------------------------------------------------------------------------
 
 def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
-                cfg=None) -> dict:
+                cfg=None, warm_start: dict | None = None) -> dict:
     """One uncached solve. mode: 'miredo' | 'ws' | 'heuristic' | 'greedy' |
     'random'. Returns {mode, layer, mapping, cycles, energy_pj, edp,
     spatial_util, temporal_util, solve_s, status}.
 
     MIP modes always return a feasible mapping: ``optimize_layer`` seeds the
     solve with the greedy/heuristic incumbent (warm start) and falls back to
-    it when the time-capped solver finds nothing better.
+    it when the time-capped solver finds nothing better. ``warm_start`` (a
+    mapping JSON, e.g. a neighboring arch's solved mapping during
+    incremental DSE) adds one more incumbent to that pool for MIP modes;
+    baseline modes ignore it.
     """
     from repro.core.baselines import greedy_mapping, heuristic_search
     from repro.core.energy import evaluate_edp
     from repro.core.formulation import FormulationConfig, optimize_layer
 
     cfg = cfg or FormulationConfig()
+    ws = mapping_from_json(warm_start) if warm_start is not None else None
     t0 = time.monotonic()
     if mode == "miredo":
-        res = optimize_layer(layer, arch, cfg)
+        res = optimize_layer(layer, arch, cfg, warm_start=ws)
         mapping, status = res.mapping, res.status.name
     elif mode == "ws":
         c = dataclasses.replace(cfg, weight_stationary=True)
-        res = optimize_layer(layer, arch, c)
+        res = optimize_layer(layer, arch, c, warm_start=ws)
         mapping, status = res.mapping, res.status.name
     elif mode == "heuristic":
         r = heuristic_search(layer, arch, budget=2000, seed=0,

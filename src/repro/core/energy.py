@@ -16,7 +16,7 @@ import math
 from repro.core import workload as wl
 from repro.core.arch import CimArch, OPERANDS, OUTPUT, WEIGHT
 from repro.core.latency import LatencyReport, evaluate
-from repro.core.mapping import Mapping
+from repro.core.mapping import Mapping, SizeContext
 
 REDUCTION_DIMS = ("C", "FY", "FX")
 
@@ -39,29 +39,46 @@ def hop_loads(mapping: Mapping, operand: str, m_dst: int) -> int:
     return loads
 
 
+def operand_energy_hops(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                        operand: str,
+                        ctx: SizeContext | None = None
+                        ) -> list[tuple[float, float]]:
+    """Per hop of the operand's (DRAM-prepended) used-level chain, the
+    ``(total_bytes, e_coef)`` pair whose product is the hop's traffic energy.
+    ``total_bytes`` carries the psum read-modify-write doubling. Single
+    source of truth for ``evaluate_energy`` and the batched packer
+    (`latency_batched.py`)."""
+    used = mapping.used_levels(operand)
+    # Prepend DRAM as the universal source if not already present.
+    if not used or used[0] != 0:
+        used = [0] + used
+    hops: list[tuple[float, float]] = []
+    for m_src, m_dst in zip(used, used[1:]):
+        loads = hop_loads(mapping, operand, m_dst)
+        chunk = ctx.stored_bytes(operand, m_dst) if ctx is not None \
+            else mapping.stored_bytes(layer, operand, arch, m_dst)
+        total_bytes = loads * chunk
+        e = arch.level(m_src).access_energy_pj_per_byte + \
+            arch.level(m_dst).access_energy_pj_per_byte
+        if operand == OUTPUT:
+            # read-modify-write while reduction dims above m_dst exist
+            rmw = any(
+                wl.is_relevant(dim, operand) is False
+                and dim in REDUCTION_DIMS
+                and mapping.level_of[operand][i] < m_dst
+                for i, (dim, _) in enumerate(mapping.temporal))
+            if rmw:
+                total_bytes *= 2
+        hops.append((total_bytes, e))
+    return hops
+
+
 def evaluate_energy(mapping: Mapping, layer: wl.Layer,
                     arch: CimArch) -> EnergyReport:
     traffic = {lam: 0.0 for lam in OPERANDS}
     bytes_moved = {lam: 0.0 for lam in OPERANDS}
     for lam in OPERANDS:
-        used = mapping.used_levels(lam)
-        # Prepend DRAM as the universal source if not already present.
-        if not used or used[0] != 0:
-            used = [0] + used
-        for m_src, m_dst in zip(used, used[1:]):
-            loads = hop_loads(mapping, lam, m_dst)
-            chunk = mapping.stored_bytes(layer, lam, arch, m_dst)
-            total_bytes = loads * chunk
-            e = arch.level(m_src).access_energy_pj_per_byte + \
-                arch.level(m_dst).access_energy_pj_per_byte
-            if lam == OUTPUT:
-                # read-modify-write while reduction dims above m_dst exist
-                rmw = any(
-                    wl.is_relevant(dim, lam) is False and dim in REDUCTION_DIMS
-                    and mapping.level_of[lam][i] < m_dst
-                    for i, (dim, _) in enumerate(mapping.temporal))
-                if rmw:
-                    total_bytes *= 2
+        for total_bytes, e in operand_energy_hops(mapping, layer, arch, lam):
             traffic[lam] += total_bytes * e
             bytes_moved[lam] += total_bytes
     mac_pj = layer.macs * arch.mac_energy_pj

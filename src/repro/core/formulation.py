@@ -810,7 +810,8 @@ def mip_latency_of(layer: wl.Layer, arch: CimArch, mapping: Mapping,
 
 
 def optimize_layer(layer: wl.Layer, arch: CimArch,
-                   cfg: FormulationConfig | None = None) -> MiredoResult:
+                   cfg: FormulationConfig | None = None,
+                   warm_start: Mapping | None = None) -> MiredoResult:
     """End-to-end: factorize -> build MIP -> solve -> decode -> re-score.
 
     The incumbent of a cheap accurate-model search provides (a) a valid upper
@@ -818,6 +819,12 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
     big-M constants (any mapping worse than UB is never optimal). On combo
     explosion the layer retries with progressively coarser Flexible
     Factorization — the paper's own complexity-control knob.
+
+    ``warm_start`` optionally injects a mapping solved for a *neighboring*
+    architecture (incremental DSE re-solves): it is re-validated against
+    this arch, and — only when feasible here and strictly better than the
+    search incumbents — tightens the pruning UB and joins the fallback
+    pool. ``None`` leaves behavior exactly unchanged.
     """
     from repro.core.baselines import greedy_mapping, heuristic_search
     cfg = cfg or FormulationConfig()
@@ -830,7 +837,14 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
     seed_res = heuristic_search(layer, arch, budget=2000, seed=1,
                                 accurate=True, k_min=cfg.k_min,
                                 alpha=cfg.alpha)
-    ub = min(g_lat, seed_res.eval_latency)
+    # ties prefer the earlier entry: search incumbent, then greedy, then
+    # the neighbor warm start (matching the historical fallback choice)
+    incumbents = [(seed_res.eval_latency, seed_res.mapping),
+                  (g_lat, greedy)]
+    if warm_start is not None and not validate(warm_start, layer, arch):
+        incumbents.append(
+            (evaluate(warm_start, layer, arch).total_cycles, warm_start))
+    ub = min(l for l, _ in incumbents)
     ladders = [
         (cfg.alpha, cfg.k_min),
         (max(cfg.alpha, 0.5), 2),
@@ -855,9 +869,8 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
         dt = time.monotonic() - t0
         if not sol.ok:
             # UB mapping may not be representable at this factorization
-            # granularity; fall back to the search incumbent.
-            fallback = seed_res.mapping if seed_res.eval_latency <= g_lat \
-                else greedy
+            # granularity; fall back to the best incumbent.
+            fallback = min(incumbents, key=lambda lc: lc[0])[1]
             rep = evaluate(fallback, layer, arch)
             return MiredoResult(
                 mapping=fallback, status=sol.status, objective=math.nan,
@@ -872,8 +885,7 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
         rep = evaluate(mapping, layer, arch)
         # never return something worse than the incumbent
         if rep.total_cycles > ub:
-            fallback = seed_res.mapping if seed_res.eval_latency <= g_lat \
-                else greedy
+            fallback = min(incumbents, key=lambda lc: lc[0])[1]
             rep_f = evaluate(fallback, layer, arch)
             if rep_f.total_cycles < rep.total_cycles:
                 mapping, rep = fallback, rep_f

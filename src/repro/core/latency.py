@@ -29,7 +29,7 @@ import math
 
 from repro.core import workload as wl
 from repro.core.arch import CimArch, INPUT, OPERANDS, OUTPUT, WEIGHT
-from repro.core.mapping import Mapping
+from repro.core.mapping import Mapping, SizeContext
 
 
 @dataclasses.dataclass
@@ -57,34 +57,69 @@ class LatencyReport:
         return self.total_cycles * self.temporal_util
 
 
-def transfer_cycles(mapping: Mapping, layer: wl.Layer, arch: CimArch,
-                    operand: str, slot: int) -> float:
-    """T_{i,λ} per eq. (11): chunk bytes / source-level effective bandwidth,
+def _hop_cycles(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                operand: str, m_src: int, m_dst: int | None,
+                ctx: SizeContext | None = None) -> float:
+    """Eq. (11) for one hop: chunk bytes / source-level effective bandwidth,
     plus the Memory-mode switch penalty for weight reloads into the macro."""
-    m = mapping.level_of[operand][slot]
-    chunk = mapping.transfer_bytes(layer, operand, arch, m)
-    bw = mapping.eff_bw_bytes(arch, m)
+    if ctx is not None:
+        chunk = ctx.transfer_bytes(operand, m_src)
+        bw = ctx.eff_bw_bytes(m_src)
+    else:
+        chunk = mapping.transfer_bytes(layer, operand, arch, m_src)
+        bw = mapping.eff_bw_bytes(arch, m_src)
     t = math.ceil(chunk / bw)
-    dest = mapping.next_used_below(operand, m)
-    if operand == WEIGHT and dest == arch.macro_level:
+    if operand == WEIGHT and m_dst == arch.macro_level:
         t += arch.mode_switch_cycles
     return float(t)
 
 
-def analyze_slots(mapping: Mapping, layer: wl.Layer,
-                  arch: CimArch) -> list[SlotInfo]:
+def transfer_cycles(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                    operand: str, slot: int) -> float:
+    """T_{i,λ} per eq. (11) for the slot's source level."""
+    m = mapping.level_of[operand][slot]
+    return _hop_cycles(mapping, layer, arch, operand, m,
+                       mapping.next_used_below(operand, m))
+
+
+def operand_transfer_table(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                           operand: str,
+                           ctx: SizeContext | None = None) -> dict[int, float]:
+    """T cycles keyed by *source* level, for every hop of the operand's
+    used-level chain (plus the initial DRAM hop under key 0 when level 0
+    holds no slots for the operand). T_{i,λ} depends on the slot only
+    through its level, so this table — computed once per (mapping, operand)
+    — is the single source of truth the scalar slot analysis, the one-time
+    fill accounting and the batched packer (`latency_batched.py`) all read."""
+    used = mapping.used_levels(operand)
+    table: dict[int, float] = {}
+    for m_prev, m_dst in zip(used, used[1:]):
+        table[m_prev] = _hop_cycles(mapping, layer, arch, operand,
+                                    m_prev, m_dst, ctx)
+    if used and used[0] != 0:
+        table[0] = _hop_cycles(mapping, layer, arch, operand, 0, used[0], ctx)
+    return table
+
+
+def analyze_slots(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                  tables: dict[str, dict[int, float]] | None = None
+                  ) -> list[SlotInfo]:
+    if tables is None:
+        tables = {lam: operand_transfer_table(mapping, layer, arch, lam)
+                  for lam in OPERANDS}
+    dest_of = {lam: {m: mapping.next_used_below(lam, m)
+                     for m in mapping.used_levels(lam)}
+               for lam in OPERANDS}
     slots = []
     for i, (dim, n) in enumerate(mapping.temporal):
         level = {lam: mapping.level_of[lam][i] for lam in OPERANDS}
         transfer, double = {}, {}
         for lam in OPERANDS:
             m = level[lam]
-            dest = mapping.next_used_below(lam, m)
+            dest = dest_of[lam][m]
             has = wl.is_relevant(dim, lam) and dest is not None
-            transfer[lam] = transfer_cycles(mapping, layer, arch, lam, i) \
-                if has else 0.0
-            dbl = has and dest is not None and \
-                mapping.is_double_buffered(lam, dest, arch)
+            transfer[lam] = tables[lam][m] if has else 0.0
+            dbl = has and mapping.is_double_buffered(lam, dest, arch)
             if lam == WEIGHT and dest == arch.macro_level:
                 dbl = False  # mode exclusivity
             double[lam] = dbl
@@ -108,7 +143,9 @@ def _row(operand: str, t: float, dbl: bool, l_i: float, n: float,
 
 
 def operand_fill_hops(mapping: Mapping, layer: wl.Layer, arch: CimArch,
-                      operand: str) -> list[tuple[bool, float]]:
+                      operand: str,
+                      table: dict[int, float] | None = None
+                      ) -> list[tuple[bool, float]]:
     """Per hop of the operand's used-level chain, ``(triggered, cycles)``.
 
     A hop is *triggered* when some relevant temporal slot at or above its
@@ -121,23 +158,17 @@ def operand_fill_hops(mapping: Mapping, layer: wl.Layer, arch: CimArch,
     for both accountings."""
     used = mapping.used_levels(operand)
     n = mapping.n_slots()
+    if table is None:
+        table = operand_transfer_table(mapping, layer, arch, operand)
     hops: list[tuple[bool, float]] = []
-    for m_prev, m_dst in zip(used, used[1:]):
+    for m_prev in used[:-1]:
         triggered = any(
             wl.is_relevant(mapping.temporal[i][0], operand)
             and mapping.level_of[operand][i] <= m_prev
             for i in range(n))
-        chunk = mapping.transfer_bytes(layer, operand, arch, m_prev)
-        t = math.ceil(chunk / mapping.eff_bw_bytes(arch, m_prev))
-        if operand == WEIGHT and m_dst == arch.macro_level:
-            t += arch.mode_switch_cycles
-        hops.append((triggered, float(t)))
+        hops.append((triggered, table[m_prev]))
     if used and used[0] != 0:
-        chunk = mapping.transfer_bytes(layer, operand, arch, 0)
-        t = math.ceil(chunk / mapping.eff_bw_bytes(arch, 0))
-        if operand == WEIGHT and used[0] == arch.macro_level:
-            t += arch.mode_switch_cycles
-        hops.append((False, float(t)))
+        hops.append((False, table[0]))
     return hops
 
 
@@ -206,19 +237,37 @@ def idealized_cycles(mapping: Mapping, layer: wl.Layer,
     latency per level = max(compute, transfer) assuming perfect overlap
     everywhere. Used by the ZigZag-style heuristic baseline to *pick* its
     mapping; the resulting mapping is then re-scored with `evaluate`."""
+    compute, terms = idealized_terms(mapping, layer, arch)
+    worst = compute
+    for num, bw in terms:
+        worst = max(worst, num / bw)
+    return float(worst)
+
+
+def idealized_terms(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                    ctx: SizeContext | None = None
+                    ) -> tuple[int, list[tuple[float, float]]]:
+    """The idealized model's raw terms: ``(compute_cycles, [(num, bw), ...])``
+    with one ``num / bw`` transfer bound per (operand, used level with a
+    destination), in the scalar evaluation order. Shared with the batched
+    packer (`latency_batched.py`) so both front-ends derive the same
+    quantities."""
     temporal_iters = math.prod(f for _, f in mapping.temporal)
     compute = temporal_iters * arch.l_mvm_cycles
-    worst = compute
+    terms: list[tuple[float, float]] = []
     for lam in OPERANDS:
         for m in mapping.used_levels(lam):
-            dest = mapping.next_used_below(lam, m)
-            if dest is None:
+            if mapping.next_used_below(lam, m) is None:
                 continue
             # iterations of loops at or above this level that change the tile
             iters = 1
             for i, (dim, f) in enumerate(mapping.temporal):
                 if mapping.level_of[lam][i] <= m and wl.is_relevant(dim, lam):
                     iters *= f
-            chunk = mapping.transfer_bytes(layer, lam, arch, m)
-            worst = max(worst, iters * chunk / mapping.eff_bw_bytes(arch, m))
-    return float(worst)
+            if ctx is not None:
+                terms.append((iters * ctx.transfer_bytes(lam, m),
+                              ctx.eff_bw_bytes(m)))
+            else:
+                chunk = mapping.transfer_bytes(layer, lam, arch, m)
+                terms.append((iters * chunk, mapping.eff_bw_bytes(arch, m)))
+    return compute, terms

@@ -59,14 +59,26 @@ class Mapping:
         return out
 
     def used_levels(self, operand: str) -> list[int]:
-        return sorted(set(self.level_of[operand]))
+        # Memoized: every analysis pass asks repeatedly, and mappings are
+        # frozen. Callers must not mutate the returned list (none do).
+        cache = self.__dict__.get("_used_lv")
+        if cache is None:
+            cache = {}
+            object.__setattr__(self, "_used_lv", cache)
+        v = cache.get(operand)
+        if v is None:
+            v = sorted(set(self.level_of[operand]))
+            cache[operand] = v
+        return v
 
     def deepest_used(self, operand: str) -> int:
         return max(self.level_of[operand], default=0)
 
     def next_used_below(self, operand: str, m: int) -> int | None:
-        deeper = [x for x in self.used_levels(operand) if x > m]
-        return min(deeper) if deeper else None
+        for x in self.used_levels(operand):
+            if x > m:
+                return x
+        return None
 
     def is_double_buffered(self, operand: str, level: int,
                            arch: CimArch) -> bool:
@@ -135,6 +147,174 @@ class Mapping:
         return cap * self.used_lanes(arch, m)
 
 
+@dataclasses.dataclass
+class SizeContext:
+    """Memoized per-mapping size/bandwidth/capacity tables.
+
+    ``Mapping.stored_bytes``/``transfer_bytes`` recompute their tile-bound
+    scan per call; the analysis helpers (`latency.operand_transfer_table`,
+    `energy.operand_energy_hops`, `latency.idealized_terms`,
+    `mapping.capacity_usage`) query the same handful of (operand, level)
+    sizes repeatedly, which dominates batched packing
+    (`latency_batched.pack`). This context computes every needed entry in
+    one monotone suffix-product pass per operand — identical integer
+    products, so byte-identical bytes — and answers lookups from dicts.
+    Entries exist for each operand's used levels plus DRAM (level 0);
+    anything else falls back to the mapping's own methods."""
+
+    mapping: Mapping
+    layer: wl.Layer
+    arch: CimArch
+    stored: dict[str, dict[int, float]]
+    transfer: dict[str, dict[int, float]]
+    bw: dict[int, float]
+    cap: dict[int, float | None]
+
+    def stored_bytes(self, operand: str, m: int) -> float:
+        v = self.stored[operand].get(m)
+        if v is None:
+            return self.mapping.stored_bytes(self.layer, operand,
+                                             self.arch, m)
+        return v
+
+    def transfer_bytes(self, operand: str, m: int) -> float:
+        v = self.transfer[operand].get(m)
+        if v is None:
+            return self.mapping.transfer_bytes(self.layer, operand,
+                                               self.arch, m)
+        return v
+
+    def eff_bw_bytes(self, m: int) -> float:
+        return self.bw[m]
+
+    def eff_capacity(self, m: int) -> float | None:
+        return self.cap[m]
+
+
+#: dim-name -> index into `wl.DIMS`-ordered tile vectors (hot-path helper)
+_DI = {d: i for i, d in enumerate(wl.DIMS)}
+
+
+def size_context(mapping: Mapping, layer: wl.Layer,
+                 arch: CimArch) -> SizeContext:
+    """Build the memoized size tables for one mapping (see `SizeContext`).
+
+    Per operand the temporal part of every level's tile is a *suffix*
+    product of the slot factors (level assignment is monotone), so one
+    innermost-to-outermost walk yields the stored tile (slots at levels
+    >= m) and the transfer chunk (slots at levels >= m+1) for every used
+    level, plus the DRAM-source chunk at level 0. Tiles are 7-int vectors
+    in `wl.DIMS` order; all products are exact integer arithmetic, so the
+    resulting bytes are bit-identical to the per-call mapping methods."""
+    # spatial per-axis per-dim factor products, and used lanes per axis
+    ax_dims: list[tuple[int, list[tuple[int, int]]]] = []
+    ax_lanes: list[tuple[int | None, int]] = []
+    for ax in arch.spatial:
+        d: dict[int, int] = {}
+        for dim, f in mapping.spatial.get(ax.name, ()):
+            k = _DI[dim]
+            d[k] = d.get(k, 1) * f
+        ax_dims.append((ax.at_level, list(d.items())))
+        ax_lanes.append((ax.replicates_from, math.prod(d.values())))
+
+    bw, cap = {}, {}
+    for m in range(arch.n_levels):
+        lanes = 1
+        for rep, ext in ax_lanes:
+            if rep is not None and rep <= m:
+                lanes *= ext
+        bw[m] = arch.level(m).bytes_per_cycle() * lanes
+        c = arch.level(m).capacity_bytes
+        cap[m] = None if c is None else c * lanes
+
+    ones = [1] * 7
+    sp_cache: dict[int, list[int]] = {}
+
+    def spatial_tile(min_cu: int) -> list[int]:
+        sp = sp_cache.get(min_cu)
+        if sp is None:
+            sp = list(ones)
+            for at, items in ax_dims:
+                if at >= min_cu:
+                    for k, f in items:
+                        sp[k] *= f
+            sp_cache[min_cu] = sp
+        return sp
+
+    stride = layer.stride
+    tmp_idx = [(_DI[d], f) for d, f in mapping.temporal]
+
+    def elems(lam: str, td: list[int], sp: list[int]) -> int:
+        # inlined wl.operand_tile_elems on the (temporal x spatial) tile —
+        # same integer products, index order N K C OY OX FY FX
+        if lam == WEIGHT:
+            return (td[1] * sp[1]) * (td[2] * sp[2]) \
+                * (td[5] * sp[5]) * (td[6] * sp[6])
+        if lam == OUTPUT:
+            return (td[0] * sp[0]) * (td[1] * sp[1]) \
+                * (td[3] * sp[3]) * (td[4] * sp[4])
+        iy = (td[3] * sp[3] - 1) * stride + td[5] * sp[5]
+        ix = (td[4] * sp[4] - 1) * stride + td[6] * sp[6]
+        return (td[0] * sp[0]) * (td[2] * sp[2]) * iy * ix
+
+    stored: dict[str, dict[int, float]] = {}
+    transfer: dict[str, dict[int, float]] = {}
+    for lam in OPERANDS:
+        lv = mapping.level_of[lam]
+        n = len(lv)
+        ms = sorted(set(lv) | {0}, reverse=True)
+        td = list(ones)
+        st_l, tr_l = {}, {}
+        i = n
+        for m in ms:
+            # td holds the suffix of slots at levels > m (== >= m+1, since
+            # consecutive ms are consecutive used levels)
+            sp = spatial_tile(m)
+            tr_elems = elems(lam, td, sp)
+            while i > 0 and lv[i - 1] >= m:
+                i -= 1
+                k, f = tmp_idx[i]
+                td[k] *= f
+            st_elems = elems(lam, td, sp)
+            bits = operand_bits(arch, m, lam)
+            tr_l[m] = tr_elems * bits / 8.0
+            st_l[m] = st_elems * bits / 8.0
+        stored[lam] = st_l
+        transfer[lam] = tr_l
+    return SizeContext(mapping=mapping, layer=layer, arch=arch,
+                       stored=stored, transfer=transfer, bw=bw, cap=cap)
+
+
+def capacity_usage(mapping: Mapping, layer: wl.Layer, arch: CimArch,
+                   ctx: SizeContext | None = None
+                   ) -> list[tuple[int, float, dict[str, float]]]:
+    """Eq. (9) raw terms, one entry per capacity-bounded level:
+    ``(m, eff_capacity, {operand: (1 + psi^DM) * stored_bytes})`` over the
+    operands that hold slots at (and are served by) level m. Single source
+    of truth for ``validate``'s capacity clause and the batched feasibility
+    check (`latency_batched.py`). ``ctx`` routes size lookups through a
+    prebuilt `SizeContext` (identical values, memoized)."""
+    out: list[tuple[int, float, dict[str, float]]] = []
+    used = {lam: set(mapping.used_levels(lam)) for lam in OPERANDS}
+    for m in range(arch.n_levels):
+        cap = ctx.eff_capacity(m) if ctx is not None else \
+            mapping.eff_capacity(arch, m)
+        if cap is None:
+            continue
+        sizes: dict[str, float] = {}
+        for lam in OPERANDS:
+            if m not in used[lam]:
+                continue
+            if not arch.serves(m, lam):
+                continue
+            mult = 2 if mapping.is_double_buffered(lam, m, arch) else 1
+            sizes[lam] = mult * (ctx.stored_bytes(lam, m) if ctx is not None
+                                 else mapping.stored_bytes(layer, lam,
+                                                           arch, m))
+        out.append((m, cap, sizes))
+    return out
+
+
 def validate(mapping: Mapping, layer: wl.Layer, arch: CimArch) -> list[str]:
     """Return a list of constraint violations (empty = feasible)."""
     errs: list[str] = []
@@ -172,19 +352,8 @@ def validate(mapping: Mapping, layer: wl.Layer, arch: CimArch) -> list[str]:
         # allowed only if all weight factors are spatial (tiny layer)
         pass
     # (9) capacity with double-buffering multiplier.
-    for m in range(arch.n_levels):
-        cap = mapping.eff_capacity(arch, m)
-        if cap is None:
-            continue
+    for m, cap, sizes in capacity_usage(mapping, layer, arch):
         level = arch.level(m)
-        sizes = {}
-        for lam in OPERANDS:
-            if m not in mapping.used_levels(lam):
-                continue
-            if not arch.serves(m, lam):
-                continue
-            mult = 2 if mapping.is_double_buffered(lam, m, arch) else 1
-            sizes[lam] = mult * mapping.stored_bytes(layer, lam, arch, m)
         if level.shared:
             if sum(sizes.values()) > cap + 1e-9:
                 errs.append(

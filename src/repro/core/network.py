@@ -192,8 +192,8 @@ def _aggregate(layers: list[LayerResult]) -> dict[str, float]:
 
 def _solve_job(args):
     """Process-pool entry point (top-level: must be picklable)."""
-    layer, arch, mode, cfg = args
-    return solve_layer(layer, arch, mode, cfg)
+    layer, arch, mode, cfg, ws = args if len(args) == 5 else (*args, None)
+    return solve_layer(layer, arch, mode, cfg, warm_start=ws)
 
 
 def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
@@ -207,8 +207,16 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
                      use_cache: bool = True,
                      schedule: bool = True,
                      schedule_boundaries: Sequence[int] | None = None,
+                     warm_starts: dict[str, dict] | None = None,
                      verbose: bool = False) -> NetworkResult:
     """Optimize every layer of a network and aggregate latency/energy/EDP.
+
+    ``warm_starts`` maps `layer_cache_key` -> mapping JSON; for MIP modes
+    each matching unique layer's solve receives that mapping as an extra
+    incumbent (re-validated against this arch — see
+    `formulation.optimize_layer`). Warm-started solves cache under keys
+    carrying a warm-start digest, so they never alias cold records.
+    Baseline modes ignore warm starts entirely.
 
     ``counts`` gives per-input-layer multiplicity (e.g. ResNet block repeat
     counts, transformer depth); identical layers dedup to one solve either
@@ -246,6 +254,7 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
     # Resolve cache hits before budgeting: only real solves get solver time.
     records: dict[str, dict] = {}
     cfg_of: dict[str, object] = {}
+    ws_of: dict[str, dict | None] = {}
     to_solve: list[wl.Layer] = []
     if not is_mip:
         # budget-independent: cache key uses the base config as-is
@@ -275,7 +284,10 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
             k = layer_cache_key(ul)
             c = dataclasses.replace(base_cfg, time_limit_s=b)
             cfg_of[k] = c
-            rec = cache.get(solve_record_key(mode, ul, arch, c)) \
+            ws = warm_starts.get(k) if warm_starts else None
+            ws_of[k] = ws
+            rec = cache.get(solve_record_key(mode, ul, arch, c,
+                                             warm_start=ws)) \
                 if cache else None
             if rec is not None:
                 records[k] = rec
@@ -291,7 +303,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
         order = sorted(
             to_solve,
             key=lambda l: -budgets.get(layer_cache_key(l), l.macs))
-        jobs = [(l, arch, mode, cfg_of[layer_cache_key(l)]) for l in order]
+        jobs = [(l, arch, mode, cfg_of[layer_cache_key(l)],
+                 ws_of.get(layer_cache_key(l))) for l in order]
         if nw > 1 and len(jobs) > 1:
             with concurrent.futures.ProcessPoolExecutor(
                     max_workers=nw) as ex:
@@ -302,7 +315,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
             k = layer_cache_key(l)
             records[k] = rec
             if cache is not None:
-                cache.put(solve_record_key(mode, l, arch, cfg_of[k]), rec)
+                cache.put(solve_record_key(mode, l, arch, cfg_of[k],
+                                           warm_start=ws_of.get(k)), rec)
             if verbose:
                 print(f"[network/{mode}] {l.name}: {rec['status']} "
                       f"{rec['cycles']:.3g} cyc in {rec['solve_s']}s")
@@ -355,6 +369,7 @@ def optimize_over_archs(layers: Sequence[wl.Layer],
                         counts: Sequence[int] | None = None,
                         cache: ResultCache | None = None,
                         use_cache: bool = True,
+                        incremental: bool = False,
                         verbose: bool = False,
                         **net_kwargs) -> dict[str, NetworkResult]:
     """Batch-over-archs entry point (the co-design DSE's full-fidelity pass,
@@ -365,17 +380,31 @@ def optimize_over_archs(layers: Sequence[wl.Layer],
     `arch.arch_fingerprint`), so per-arch records never collide, reruns of a
     sweep are incremental, and a grid point that equals a previously solved
     arch — under any name — is free. Returns ``{arch.name: NetworkResult}``
-    in input order; arch names must be unique."""
+    in input order; arch names must be unique.
+
+    ``incremental=True`` (MIP modes only) threads *neighbor warm starts*
+    along the sweep: each arch's solved per-layer mappings become extra
+    incumbents for the next arch's solves (re-validated there — adjacent
+    grid points usually share near-optimal dataflows, so the MIP starts
+    from a tight UB). This changes solver inputs, so results may differ
+    from independent cold solves and records cache under warm-start-
+    digested keys; leave it off (the default) when byte-reproducible
+    cold-solve output matters."""
     archs = list(archs)
     names = [a.name for a in archs]
     assert len(set(names)) == len(names), f"duplicate arch names: {names}"
     cache = cache if cache is not None else (
         ResultCache() if use_cache else None)
     out: dict[str, NetworkResult] = {}
+    warm: dict[str, dict] | None = None
     for arch in archs:
         if verbose:
             print(f"[over-archs/{mode}] {arch.name}", flush=True)
-        out[arch.name] = optimize_network(
+        res = optimize_network(
             layers, arch, mode, counts=counts, cache=cache,
-            use_cache=use_cache, verbose=verbose, **net_kwargs)
+            use_cache=use_cache, warm_starts=warm, verbose=verbose,
+            **net_kwargs)
+        out[arch.name] = res
+        if incremental and mode in MIP_MODES:
+            warm = {lr.key: lr.record["mapping"] for lr in res.layers}
     return out
