@@ -77,6 +77,7 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
         scenarios: tuple[str, ...] = DEFAULT_SCENARIOS,
         mode: str = "miredo", slack: float = 0.25,
         screen_samples: int = 64, no_screen: bool = False,
+        rank_by: str = "latency",
         workers: int | None = None) -> dict:
     quick = quick or reduced
     bounds = None
@@ -99,11 +100,28 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
     print(f"[dse] workload {wl_name}: {len(layers)} layers, {n_unique} "
           f"unique; grid {space.size} archs, cap {cap:g}s/layer")
 
+    serve = None
+    if rank_by == "slo_goodput":
+        # Traffic scenario behind the goodput objective: the same models
+        # under a seeded Poisson stream (serve_sim's SLO regime); iteration
+        # costs are cheap greedy anchors, so this adds seconds, not solves.
+        from benchmarks.serve_sim import (CONTEXT_LEN,
+                                          MEAN_INTERARRIVAL_CYCLES,
+                                          SERVE_CFG)
+        from repro.core.serving import ServeScenario
+        serve = ServeScenario(
+            model_ids=models if workload == "lm" else ("minicpm-2b",),
+            reduced=reduced,
+            mean_interarrival_cycles=MEAN_INTERARRIVAL_CYCLES,
+            serve=SERVE_CFG, context_len=CONTEXT_LEN,
+            per_layer_cap_s=cap)
+
     res = run_dse(layers, counts, space, mode,
                   screen=not no_screen, screen_slack=slack,
                   screen_samples=screen_samples,
                   per_layer_cap_s=cap, total_budget_s=total,
                   workers=workers, schedule_boundaries=bounds,
+                  rank_by=rank_by, serve=serve,
                   verbose=True)
 
     frontier_names = {p.arch_name for p in res.frontier}
@@ -168,7 +186,25 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
         "screen": {n: {"cycles": p.cycles, "energy_pj": p.energy_pj}
                    for n, p in res.screen_points.items()},
         "wall_s": res.wall_s,
+        "rank_by": rank_by,
     }
+    if rank_by == "slo_goodput":
+        pts = res.points
+        latency_order = sorted(pts, key=lambda n: (pts[n].cycles, n))
+        goodput_order = sorted(
+            pts, key=lambda n: (-(pts[n].goodput_tok_s or 0.0), n))
+        payload["goodput"] = {
+            "latency_order": latency_order,
+            "goodput_order": goodput_order,
+            "orderings_differ": latency_order != goodput_order,
+            "latency_frontier": [p.arch_name
+                                 for p in res.frontier_by("latency")],
+            "goodput_tok_s": {n: pts[n].goodput_tok_s for n in pts},
+        }
+        print(f"[dse] goodput ranking "
+              f"{'differs from' if latency_order != goodput_order else 'coincides with'}"
+              f" latency ranking "
+              f"(goodput frontier {[p.arch_name for p in res.frontier]})")
     write_report("dse_pareto", payload)
     return payload
 
@@ -194,6 +230,12 @@ def main(argv=None) -> int:
     ap.add_argument("--screen-samples", type=int, default=64)
     ap.add_argument("--no-screen", action="store_true",
                     help="exhaustive MIP over the whole grid (no pruning)")
+    ap.add_argument("--rank-by", default="latency",
+                    choices=("latency", "slo_goodput"),
+                    help="frontier objective: scheduled single-pass "
+                         "latency, or sustained tokens/sec under SLO from "
+                         "the request-level serving simulator "
+                         "(core/serving.py)")
     ap.add_argument("--workers", type=int, default=None)
     args = ap.parse_args(argv)
     run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
@@ -202,7 +244,7 @@ def main(argv=None) -> int:
         scenarios=tuple(s for s in args.scenarios.split(",") if s),
         mode=args.mode, slack=args.slack,
         screen_samples=args.screen_samples, no_screen=args.no_screen,
-        workers=args.workers)
+        rank_by=args.rank_by, workers=args.workers)
     return 0
 
 

@@ -5,8 +5,10 @@ bridge, the ``lm`` job (the whole LM model zoo lowered through the model
 frontend, ``benchmarks/lm_models.py``), the ``dse`` job (hardware/
 dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``), the
 ``sched`` job (serial-sum vs multi-core-scheduled end-to-end latency,
-``benchmarks/sched_lm.py``) and the ``exec`` job (optimized plans executed
-on the Pallas kernels, predicted vs measured, ``benchmarks/exec_lm.py``).
+``benchmarks/sched_lm.py``), the ``serve`` job (request-level serving
+under traffic with continuous batching, ``benchmarks/serve_sim.py``) and
+the ``exec`` job (optimized plans executed on the Pallas kernels,
+predicted vs measured, ``benchmarks/exec_lm.py``).
 ``--quick`` trims solve budgets; results cache under reports/cache so
 reruns are incremental, and ``--cache-dir`` points the solve-record cache
 at a persistent location shared across runs/machines (equivalent to
@@ -25,13 +27,18 @@ import traceback
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke-test reductions + acceptance gates for "
+                         "the jobs that support them (implies --quick)")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm,dse,sched,exec,optspeed")
+                         "flexfact,bridge,lm,dse,sched,serve,exec,optspeed")
     ap.add_argument("--cache-dir", default="",
                     help="persistent solve-record cache directory (sets "
                          "MIREDO_CACHE; default reports/cache)")
     args = ap.parse_args(argv)
+    if args.reduced:
+        args.quick = True
     if args.cache_dir:
         # Every ResultCache() resolves its directory through
         # cache.default_cache_dir(), which reads MIREDO_CACHE — setting it
@@ -44,7 +51,7 @@ def main(argv=None):
     from benchmarks import (dse_pareto, exec_lm, fig4a_model_accuracy,
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
-                            opt_speed, sched_lm, tab_flexfact,
+                            opt_speed, sched_lm, serve_sim, tab_flexfact,
                             tpu_bridge_bench)
 
     jobs = [
@@ -63,6 +70,11 @@ def main(argv=None):
                                        reduced=args.quick)),
         ("sched", lambda: sched_lm.run(budget_s=budget, quick=args.quick,
                                        reduced=args.quick)),
+        # Request-level serving under traffic: continuous batching vs the
+        # serial baseline, percentile latencies and SLO-goodput arch
+        # ranking (benchmarks/serve_sim.py).
+        ("serve", lambda: serve_sim.run(budget_s=budget, quick=args.quick,
+                                        reduced=args.quick)),
         # exec always runs reduced: interpret mode emulates every grid step
         # in Python, so full-size configs are a real-hardware exercise
         # (benchmarks/exec_lm.py --no-interpret), not a harness target.

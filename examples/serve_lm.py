@@ -8,26 +8,55 @@ served decode step's optimized plan on the Pallas kernels — every kernel
 checked against its ref.py oracle, wall-clock vs predicted cycles.
 
     PYTHONPATH=src python examples/serve_lm.py
+
+``--traffic`` skips the single-step demo and instead serves a seeded
+Poisson request stream through the request-level simulator
+(core/serving.py): continuous batching vs the serial baseline, with
+iteration costs anchored on this config's own scheduled solves.
+
+    PYTHONPATH=src python examples/serve_lm.py --traffic
 """
 
+import argparse
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import get_config
-from repro.configs.base import ShapeSpec
-from repro.train.steps import (StepConfig, init_train_state,
-                               make_decode_step, make_prefill_step)
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--traffic", action="store_true",
+                    help="traffic-driven mode: serve a Poisson request "
+                         "stream through the continuous-batching "
+                         "simulator instead of the single-step demo")
+    ap.add_argument("--n-requests", type=int, default=16,
+                    help="stream length for --traffic")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.traffic:
+        traffic_demo(n_requests=args.n_requests, seed=args.seed)
+    else:
+        decode_demo()
+    print("OK")
 
 
-def main():
+def decode_demo():
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.train.steps import (StepConfig, init_train_state,
+                                   make_decode_step, make_prefill_step)
+
     cfg = get_config("glm4-9b").reduced()
     step_cfg = StepConfig(remat=False, compute_dtype=jnp.float32)
     state = init_train_state(jax.random.PRNGKey(0), cfg, step_cfg)
     params = state.params
-    batch, prompt_len, gen_len, max_seq = 4, 12, 20, 64
+    batch, prompt_len, gen_len = 4, 12, 20
+    # The KV cache needs exactly prompt + generated positions: the decode
+    # step appends one token per call via a one-hot(length) scatter, which
+    # silently drops any write past the padded length — so an undersized
+    # max_seq truncates the cache while the token loop keeps "working".
+    max_seq = prompt_len + gen_len
 
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(rng.integers(0, cfg.vocab_size,
@@ -58,9 +87,50 @@ def main():
     print("sample token ids:", np.asarray(out[0])[:12], "...")
     assert out.shape == (batch, gen_len + 1)
     assert np.all(np.asarray(out) >= 0)
+    # The decode loop must never have written past max_seq: the final
+    # cache length is exactly every prompt + generated token, and the last
+    # written position is in bounds (a dropped scatter would leave it 0).
+    final_len = int(np.max(np.asarray(caches.length)))
+    assert final_len == prompt_len + gen_len <= max_seq, \
+        f"cache length {final_len} != {prompt_len + gen_len}"
+    assert np.any(np.asarray(caches.k)[:, :, max_seq - 1] != 0), \
+        "last decode wrote past the padded cache (write was dropped)"
 
     report_cim_dataflow(cfg, batch, context_len=max_seq)
-    print("OK")
+
+
+def traffic_demo(n_requests: int = 16, seed: int = 0):
+    """Serve a request stream against the same reduced config: iteration
+    costs from the real stack, continuous batching vs serial baseline."""
+    from repro.configs import get_config
+    from repro.core.arch import default_arch
+    from repro.core.serving import (NetworkCostModel, RequestStream,
+                                    ServeConfig, serial_baseline,
+                                    simulate_serving)
+
+    cfg = get_config("glm4-9b").reduced()
+    arch = default_arch()
+    serve_cfg = ServeConfig(kv_capacity_tokens=512, max_batch_requests=16,
+                            max_batch_tokens=128)
+    cost = NetworkCostModel(cfg, arch, max_m=serve_cfg.max_batch_tokens,
+                            context_len=256, mode="greedy")
+    stream = RequestStream.poisson(n_requests, seed=seed,
+                                   mean_interarrival_cycles=150_000.0)
+    rep = simulate_serving(stream, cost, serve_cfg)
+    ser = serial_baseline(stream, cost, serve_cfg)
+    f = cost.freq_ghz
+    s, ss = rep.summary(f), ser.summary(f)
+    to_ms = 1.0 / (f * 1e6)
+    print(f"served {n_requests} requests on {arch.name} "
+          f"({cost.n_solves} anchor solves):")
+    print(f"  TTFT p50/p99: {s['ttft_p50_cycles'] * to_ms:.3f} / "
+          f"{s['ttft_p99_cycles'] * to_ms:.3f} ms   "
+          f"ITL p50/p99: {s['itl_p50_cycles'] * to_ms:.3f} / "
+          f"{s['itl_p99_cycles'] * to_ms:.3f} ms")
+    print(f"  continuous batching: {s['tokens_per_sec']:.4g} tok/s "
+          f"({int(s['n_merged_iterations'])} merged iterations) vs "
+          f"serial {ss['tokens_per_sec']:.4g} tok/s")
+    assert rep.makespan_cycles <= ser.makespan_cycles
 
 
 def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0,
@@ -70,6 +140,7 @@ def report_cim_dataflow(cfg, batch: int, budget_s: float = 2.0,
     Lowers the decode step of the served config to its weight-GEMM
     workload and runs the network pipeline (one MIP per unique GEMM,
     warm-started so the capped solves stay feasible)."""
+    from repro.configs.base import ShapeSpec
     from repro.core.arch import default_arch
     from repro.core.frontend import extract_workload
     from repro.core.network import optimize_network

@@ -161,6 +161,25 @@ class ShapeSpec:
         """Workload multiplicity contributed by the batch."""
         return 1 if self.is_decode else self.global_batch
 
+    @classmethod
+    def serving_iteration(cls, prefill_lens: "tuple[int, ...]",
+                          n_decode: int, *, context_len: int = 4096,
+                          name: str | None = None) -> "ShapeSpec":
+        """One continuous-batching iteration as a scenario cell.
+
+        The serving engine (`core/serving.py`) batches whole-prompt
+        prefills with single-token decode steps into ONE forward pass; its
+        GEMMs see the *total* token count as the M dim.  Lowered as a
+        decode-kind cell so ``m_tokens = sum(prefill_lens) + n_decode``
+        with ``instance_count = 1`` (one fused MVM batch, not a per-batch
+        multiplicity), and ``seq_len = context_len`` bounds the attention
+        / KV reach of the iteration."""
+        m = int(sum(prefill_lens)) + int(n_decode)
+        if m < 1:
+            raise ValueError("a serving iteration must carry >= 1 token")
+        return cls(name or f"serve_iter_m{m}", seq_len=int(context_len),
+                   global_batch=m, kind="decode")
+
 
 SHAPES = {
     "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),

@@ -135,12 +135,27 @@ class DsePoint:
     area_bits: int
     fidelity: str = "mip"            # "screen" | "mip"
     serial_cycles: float | None = None
+    #: SLO goodput (tokens/sec, mean over the serve scenario's models) from
+    #: the request-level serving simulator (`core/serving.py`); None when
+    #: no serve scenario was evaluated.
+    goodput_tok_s: float | None = None
+    #: Which objective vector `objectives()` exposes: "latency" ranks by
+    #: scheduled cycles, "slo_goodput" by -goodput (both alongside energy
+    #: and area, all minimized).
+    rank_by: str = "latency"
 
     @property
     def edp(self) -> float:
         return self.cycles * self.energy_pj
 
     def objectives(self) -> tuple[float, float, float]:
+        if self.rank_by == "slo_goodput":
+            if self.goodput_tok_s is None:
+                raise ValueError(
+                    f"{self.arch_name}: rank_by='slo_goodput' needs a "
+                    "goodput (run_dse(serve=ServeScenario(...)))")
+            return (-self.goodput_tok_s, self.energy_pj,
+                    float(self.area_bits))
         return (self.cycles, self.energy_pj, float(self.area_bits))
 
 
@@ -304,11 +319,22 @@ class DseResult:
                                            # sorted by ascending area
     validation: dict[str, list[str]]       # frontier arch -> mapping errors
     wall_s: float
+    rank_by: str = "latency"               # objective set behind `frontier`
 
     @property
     def prune_fraction(self) -> float:
         n = len(self.archs)
         return len(self.pruned) / n if n else 0.0
+
+    def frontier_by(self, rank_by: str) -> list[DsePoint]:
+        """The Pareto frontier under either objective set, from the same
+        MIP-fidelity points — lets one run compare the latency-ranked and
+        goodput-ranked frontiers directly (``rank_by="slo_goodput"``
+        requires the run to have evaluated a serve scenario)."""
+        pts = [dataclasses.replace(p, rank_by=rank_by)
+               for p in self.points.values()]
+        return sorted(pareto_frontier(pts),
+                      key=lambda p: (p.area_bits, p.cycles))
 
     def best_under_area(self, area_bits: float,
                         objective: str = "edp") -> DsePoint | None:
@@ -331,6 +357,8 @@ def run_dse(layers: Sequence[wl.Layer],
             workers: int | None = None,
             validate_frontier: bool = True,
             schedule_boundaries: Sequence[int] | None = None,
+            rank_by: str = "latency",
+            serve=None,
             verbose: bool = False) -> DseResult:
     """Co-explore the architecture grid against one workload.
 
@@ -347,8 +375,27 @@ def run_dse(layers: Sequence[wl.Layer],
     non-dominated (scheduled cycles, energy, area) points at MIP fidelity
     — latency is the multi-core schedule's end-to-end number, not the
     serial per-layer sum — each with every mapping re-validated when
-    ``validate_frontier`` is on."""
+    ``validate_frontier`` is on.
+
+    ``rank_by="slo_goodput"`` (with a ``serve=ServeScenario(...)`` traffic
+    scenario from `core/serving.py`) ranks the frontier by sustained
+    tokens/sec under SLO instead of single-pass latency: every survivor is
+    additionally run through the request-level serving simulator (iteration
+    costs from this arch's own scheduled solves) and the first objective
+    becomes ``-goodput``.  Passing ``serve`` with the default
+    ``rank_by="latency"`` annotates ``DsePoint.goodput_tok_s`` without
+    changing the frontier, and ``DseResult.frontier_by`` re-ranks the same
+    points either way.  Note the screening prune still uses incumbent
+    latency/energy — its never-prunes-the-optimum guarantee is argued for
+    the latency objectives; use ``screen=False`` when goodput and latency
+    rankings are expected to diverge hard (see DESIGN.md §Serving
+    simulator)."""
     t0 = time.monotonic()
+    if rank_by not in ("latency", "slo_goodput"):
+        raise ValueError(f"unknown rank_by {rank_by!r}")
+    if rank_by == "slo_goodput" and serve is None:
+        raise ValueError("rank_by='slo_goodput' requires a serve scenario "
+                         "(serving.ServeScenario)")
     layers = list(layers)
     counts = [1] * len(layers) if counts is None else list(counts)
     assert len(counts) == len(layers)
@@ -383,6 +430,18 @@ def run_dse(layers: Sequence[wl.Layer],
     # across layers, so core/macro-rich grid points are credited for the
     # parallelism they enable rather than scored as if every layer ran
     # alone (the serial sum rides along for reporting).
+    # Traffic fidelity: run each survivor through the serving simulator
+    # (iteration cost anchored on that arch's own scheduled solves) so the
+    # frontier can rank by sustained tokens/sec under SLO.
+    goodputs: dict[str, float] = {}
+    if serve is not None:
+        from repro.core.serving import arch_goodput
+        for n in networks:
+            goodputs[n] = arch_goodput(serve, archs[n], cache=cache,
+                                       use_cache=use_cache)["mean"]
+            if verbose:
+                print(f"[dse] serve {n}: goodput "
+                      f"{goodputs[n]:.3g} tok/s", flush=True)
     points = {
         n: DsePoint(arch_name=n,
                     cycles=(net.scheduled or net.totals)["cycles"],
@@ -391,7 +450,8 @@ def run_dse(layers: Sequence[wl.Layer],
                     # the mappings the schedule actually executes
                     energy_pj=(net.scheduled or net.totals)["energy_pj"],
                     area_bits=area_proxy(archs[n]), fidelity="mip",
-                    serial_cycles=net.totals["cycles"])
+                    serial_cycles=net.totals["cycles"],
+                    goodput_tok_s=goodputs.get(n), rank_by=rank_by)
         for n, net in networks.items()}
 
     frontier = sorted(pareto_frontier(list(points.values())),
@@ -414,4 +474,5 @@ def run_dse(layers: Sequence[wl.Layer],
                      survivors=survivors, pruned=pruned, networks=networks,
                      points=points, frontier=frontier,
                      validation=validation,
-                     wall_s=round(time.monotonic() - t0, 2))
+                     wall_s=round(time.monotonic() - t0, 2),
+                     rank_by=rank_by)

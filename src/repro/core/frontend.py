@@ -168,22 +168,31 @@ def extract_workload(cfg: ModelConfig, spec: ShapeSpec) -> ModelWorkload:
 
 
 def extract_all(cfg: ModelConfig,
-                scenarios: tuple[str, ...] | None = None
+                scenarios: tuple[str | ShapeSpec, ...] | None = None
                 ) -> dict[str, ModelWorkload]:
     """Every applicable scenario's workload (``None`` cells skipped).
 
-    ``scenarios`` filters by ShapeSpec name; unknown names raise (a typo
-    must not silently produce an empty, green benchmark run)."""
+    ``scenarios`` entries are ShapeSpec *names* (filtering the registered
+    SHAPES cells; unknown names raise — a typo must not silently produce
+    an empty, green benchmark run) or ad-hoc ``ShapeSpec`` objects, e.g.
+    the serving engine's per-iteration batch compositions
+    (``ShapeSpec.serving_iteration``), keyed by their own name."""
+    names: set[str] = set()
+    extra: list[ShapeSpec] = []
     if scenarios:
-        unknown = set(scenarios) - set(SHAPES)
+        for s in scenarios:
+            (extra.append if isinstance(s, ShapeSpec) else names.add)(s)
+        unknown = names - set(SHAPES)
         if unknown:
             raise KeyError(f"unknown scenario(s) {sorted(unknown)}; "
                            f"known: {sorted(SHAPES)}")
     out = {}
     for sname, spec in applicable_shapes(cfg).items():
-        if spec is None or (scenarios and sname not in scenarios):
+        if spec is None or (scenarios and sname not in names):
             continue
         out[sname] = extract_workload(cfg, spec)
+    for spec in extra:
+        out[spec.name] = extract_workload(cfg, spec)
     return out
 
 

@@ -164,6 +164,12 @@ class NetworkResult:
     #: allocations, per-stage latencies), for reporting and cross-checks.
     schedule: object | None = None
 
+    @property
+    def scheduled_cycles(self) -> float:
+        """End-to-end latency: the multi-core schedule's cycles when
+        scheduling ran, the serial sum otherwise."""
+        return float((self.scheduled or self.totals)["cycles"])
+
     def record_of(self, name: str) -> dict:
         for lr in self.layers:
             if lr.layer.name == name:
