@@ -1,0 +1,212 @@
+"""Multi-chip mesh scaling: an infeasible-on-one-chip model made feasible
+— and faster — on 2-4 chips (`core/mesh.py`, DESIGN.md §Mesh optimization).
+
+The showcase model is a stack of structurally distinct GEMM layers whose
+combined weights exceed one chip's macro capacity (so the single-chip
+scheduler can never keep them resident) but fit a 4-chip mesh. Each row
+optimizes the model against an ``n``-chip mesh at fixed link bandwidth
+through ``optimize_network(mesh=...)`` — per-layer TP shard choices,
+eq. 9-style inter-chip transfer terms, and the (chip, core) placement
+scheduler — and reports residency feasibility, the serial/scheduled
+cycles, the shard decomposition and the network-mode simulator agreement.
+A side sweep varies the link bandwidth at the largest mesh (the DSE axis,
+`dse.MeshSpace`).
+
+Registered as the ``mesh`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python -m benchmarks.mesh_scaling --reduced
+
+``--reduced`` is the CI acceptance path (mesh-smoke) and enforces the
+mesh contract instead of warning:
+
+  * the 1-chip mesh reproduces the single-chip result bit for bit
+    (totals AND schedule — the `tests/test_mesh.py` invariant, end to
+    end);
+  * the showcase model is residency-infeasible at 1 chip and feasible at
+    4 (`mesh.residency_feasible`);
+  * the scheduled makespan strictly improves from 2 to 4 chips at fixed
+    link bandwidth;
+  * the placement MIP is never worse than the greedy water-filling
+    placement (both judged by the scheduled end-to-end cycles);
+  * the mesh schedule agrees with the event replay within the Fig. 4(a)
+    tolerance (`scheduler.cross_check_mesh`).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import md_table, write_report
+from repro.core import workload as wl
+from repro.core.arch import MeshLink, default_arch
+from repro.core.mesh import make_mesh, residency_feasible, total_macro_bytes
+from repro.core.network import optimize_network
+from repro.core.scheduler import cross_check, cross_check_mesh, schedule_mesh
+
+#: Quick-mode solver knobs (same spirit as benchmarks/sched_lm.py).
+QUICK_CAP_S = 2.0
+#: Simulator-agreement gate: the tier-1 Fig. 4(a) floor.
+SIM_ACC_FLOOR = 0.8
+#: Mesh sizes per row; the link-bandwidth sweep runs at the largest.
+CHIP_COUNTS = (1, 2, 4)
+LINK_BITS_SWEEP = (64, 128, 256, 512)
+
+
+def showcase_layers() -> tuple[list[wl.Layer], list[int]]:
+    """Structurally distinct GEMM stack sized to overflow one chip.
+
+    Eight "block" layers, (M x 96) @ (96 x 96) with distinct M: weight
+    footprint 96*96 = 9216 bytes each, 73728 bytes total — over the
+    Table-IV chip's 32768 macro bytes (8 cores x 4 KB crossbars) and over
+    a 2-chip mesh. Four repeated "head" layers, (M x 48) @ (48 x 48) with
+    count 6 (2304 bytes x 6 instances each, 55296 bytes): the depth
+    repeats give the scheduler steady-state item streams to pipeline, so
+    segment packing — and hence the (chip, core) placement machinery and
+    the `cross_check_mesh` replay — genuinely engages at every mesh size.
+    Grand total 129024 bytes: infeasible at 1-2 chips, feasible at 4.
+    Every split dim divides 2 and 4, so both TP splits stay available."""
+    blocks = [wl.gemm(f"blk{i}", m, 96, 96)
+              for i, m in enumerate((8, 12, 16, 24, 32, 48, 64, 96))]
+    heads = [wl.gemm(f"head{i}", m, 48, 48)
+             for i, m in enumerate((16, 24, 32, 40))]
+    layers = blocks + heads
+    return layers, [1] * len(blocks) + [6] * len(heads)
+
+
+def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
+        mode: str = "miredo", link_bits: int = 256,
+        workers: int | None = None) -> dict:
+    quick = quick or reduced
+    cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+    chip = default_arch()
+    layers, counts = showcase_layers()
+    link = MeshLink(bandwidth_bits=link_bits)
+
+    # single-chip reference (the N=1 identity target)
+    single = optimize_network(layers, chip, mode, counts=counts,
+                              per_layer_cap_s=cap, workers=workers)
+
+    rows, table = [], []
+    sched_by_n, accs = {}, []
+    for n in CHIP_COUNTS:
+        mesh = make_mesh(chip, n, link=link)
+        net = optimize_network(layers, mesh=mesh, mode=mode, counts=counts,
+                               per_layer_cap_s=cap, workers=workers)
+        feasible = residency_feasible(layers, counts, mesh)
+        s = net.scheduled
+        if n == 1:
+            acc, n_checked = cross_check(net.schedule, chip)
+            shards = "-"
+            mip_vs_greedy = None
+        else:
+            acc, n_checked = cross_check_mesh(net.schedule, mesh)
+            shards = ",".join(sorted({lr.record["shard"]["choice"]
+                                      for lr in net.layers}))
+            greedy_sched = schedule_mesh(net.layers, mesh, use_mip=False)
+            mip_vs_greedy = (net.schedule.scheduled_cycles,
+                             greedy_sched.scheduled_cycles)
+        if n_checked:
+            accs.append(acc)
+        sched_by_n[n] = s["cycles"]
+        rows.append({
+            "n_chips": n, "feasible": feasible,
+            "serial_cycles": s["serial_cycles"],
+            "scheduled_cycles": s["cycles"],
+            "n_packed": int(s["n_packed"]), "shards": shards,
+            "mip_cycles": mip_vs_greedy[0] if mip_vs_greedy else None,
+            "greedy_cycles": mip_vs_greedy[1] if mip_vs_greedy else None,
+            "sim_accuracy": acc if n_checked else None,
+            "sim_segments": n_checked,
+        })
+        table.append([n, "yes" if feasible else "NO",
+                      f"{s['serial_cycles']:.4g}", f"{s['cycles']:.4g}",
+                      int(s["n_packed"]), shards,
+                      f"{acc:.3f}" if n_checked else "-"])
+
+    headers = ["chips", "resident-feasible", "serial cyc", "sched cyc",
+               "packed", "shards", "sim acc"]
+    print(md_table(headers, table))
+    need = sum(c * l.operand_elems("W") for l, c in zip(layers, counts))
+    print(f"[mesh/{mode}] weights {need} B vs "
+          f"{total_macro_bytes(make_mesh(chip, 1))} B/chip; scheduled "
+          + " -> ".join(f"{n}: {sched_by_n[n]:.4g}" for n in CHIP_COUNTS))
+
+    # link-bandwidth sweep at the largest mesh (the DSE axis)
+    n_top = CHIP_COUNTS[-1]
+    sweep = []
+    for bits in LINK_BITS_SWEEP:
+        mesh = make_mesh(chip, n_top, link=MeshLink(bandwidth_bits=bits))
+        net = optimize_network(layers, mesh=mesh, mode=mode, counts=counts,
+                               per_layer_cap_s=cap, workers=workers)
+        sweep.append({"link_bits": bits,
+                      "scheduled_cycles": net.scheduled["cycles"]})
+    print(md_table(["link bits", f"sched cyc @ {n_top} chips"],
+                   [[s["link_bits"], f"{s['scheduled_cycles']:.4g}"]
+                    for s in sweep]))
+
+    mean_acc = sum(accs) / len(accs) if accs else 1.0
+    payload = {"mode": mode, "link_bits": link_bits, "rows": rows,
+               "link_sweep": sweep, "mean_sim_accuracy": mean_acc,
+               "single_chip": {"totals": single.totals,
+                               "scheduled": single.scheduled}}
+    write_report("mesh_scaling", payload)
+
+    # --reduced is the CI acceptance path (mesh-smoke): enforce the mesh
+    # contract instead of warning, so regressions fail the job.
+    if reduced:
+        mesh1 = optimize_network(layers, mesh=make_mesh(chip, 1, link=link),
+                                 mode=mode, counts=counts,
+                                 per_layer_cap_s=cap, workers=workers)
+        if mesh1.totals != single.totals or \
+                mesh1.scheduled != single.scheduled:
+            raise RuntimeError(
+                f"1-chip mesh is not the single chip: totals "
+                f"{mesh1.totals} vs {single.totals}, scheduled "
+                f"{mesh1.scheduled} vs {single.scheduled}")
+        by_n = {r["n_chips"]: r for r in rows}
+        if by_n[1]["feasible"]:
+            raise RuntimeError("showcase model unexpectedly fits one chip "
+                               "(the benchmark exists to overflow it)")
+        if not by_n[CHIP_COUNTS[-1]]["feasible"]:
+            raise RuntimeError(
+                f"showcase model does not fit {CHIP_COUNTS[-1]} chips")
+        if not sched_by_n[4] < sched_by_n[2]:
+            raise RuntimeError(
+                f"scheduled makespan did not improve 2 -> 4 chips: "
+                f"{sched_by_n[2]} -> {sched_by_n[4]}")
+        for r in rows:
+            if r["mip_cycles"] is not None and \
+                    r["mip_cycles"] > r["greedy_cycles"] + 1e-6:
+                raise RuntimeError(
+                    f"{r['n_chips']} chips: placement MIP worse than "
+                    f"greedy ({r['mip_cycles']} > {r['greedy_cycles']})")
+            if r["scheduled_cycles"] > r["serial_cycles"]:
+                raise RuntimeError(
+                    f"{r['n_chips']} chips: scheduled worse than serial")
+        if accs and mean_acc < SIM_ACC_FLOOR:
+            raise RuntimeError(
+                f"mesh simulator agreement {mean_acc:.3f} < "
+                f"{SIM_ACC_FLOOR} (Fig. 4(a) tolerance)")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick solver caps (implied by --reduced)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="quick caps + CI acceptance gates (mesh-smoke)")
+    ap.add_argument("--budget", type=float, default=45.0,
+                    help="per-layer MIP cap (seconds; quick mode clamps)")
+    ap.add_argument("--mode", default="miredo")
+    ap.add_argument("--link-bits", type=int, default=256,
+                    help="link bandwidth (bits/cycle) for the scaling rows")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
+        mode=args.mode, link_bits=args.link_bits, workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

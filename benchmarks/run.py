@@ -8,7 +8,9 @@ dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``), the
 ``benchmarks/sched_lm.py``), the ``serve`` job (request-level serving
 under traffic with continuous batching, ``benchmarks/serve_sim.py``) and
 the ``exec`` job (optimized plans executed on the Pallas kernels,
-predicted vs measured, ``benchmarks/exec_lm.py``).
+predicted vs measured, ``benchmarks/exec_lm.py``) and the ``mesh`` job
+(multi-chip mesh scaling with TP sharding and (chip, core) placement,
+``benchmarks/mesh_scaling.py``).
 ``--quick`` trims solve budgets; results cache under reports/cache so
 reruns are incremental, and ``--cache-dir`` points the solve-record cache
 at a persistent location shared across runs/machines (equivalent to
@@ -32,7 +34,8 @@ def main(argv=None):
                          "the jobs that support them (implies --quick)")
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
-                         "flexfact,bridge,lm,dse,sched,serve,exec,optspeed")
+                         "flexfact,bridge,lm,dse,sched,serve,exec,optspeed,"
+                         "mesh")
     ap.add_argument("--cache-dir", default="",
                     help="persistent solve-record cache directory (sets "
                          "MIREDO_CACHE; default reports/cache)")
@@ -51,8 +54,8 @@ def main(argv=None):
     from benchmarks import (dse_pareto, exec_lm, fig4a_model_accuracy,
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
-                            opt_speed, sched_lm, serve_sim, tab_flexfact,
-                            tpu_bridge_bench)
+                            mesh_scaling, opt_speed, sched_lm, serve_sim,
+                            tab_flexfact, tpu_bridge_bench)
 
     jobs = [
         ("fig4a", lambda: fig4a_model_accuracy.run(
@@ -83,6 +86,11 @@ def main(argv=None):
         # scalar-vs-batched throughput race + exact-agreement check; the
         # cold/warm DSE timing is its standalone --dse flag (minutes).
         ("optspeed", lambda: opt_speed.run(quick=args.quick)),
+        # Multi-chip mesh scaling: infeasible-on-one-chip model on 2-4
+        # chips, TP sharding + (chip, core) placement
+        # (benchmarks/mesh_scaling.py).
+        ("mesh", lambda: mesh_scaling.run(budget_s=budget, quick=args.quick,
+                                          reduced=args.reduced)),
     ]
     # A typo'd --only used to run zero jobs and still print "All benchmarks
     # complete" with exit 0 — validate against the job list instead.

@@ -218,6 +218,39 @@ def max_spatial_macs(arch: CimArch) -> int:
 
 
 # ---------------------------------------------------------------------------
+# Multi-chip mesh vocabulary (DESIGN.md §Mesh optimization)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshLink:
+    """One inter-chip link of a CIM chip mesh (`core/mesh.py`).
+
+    The link is the mesh-level analogue of a `MemLevel` bus: a bandwidth in
+    bits per cycle, a fixed per-hop router/SerDes latency, and a per-byte
+    transfer energy (chip-to-chip SerDes energy dwarfs on-chip SRAM access
+    — the NoC dataflow literature's constant, arXiv:2111.11744). All three
+    are solver-relevant and therefore part of the structural mesh
+    fingerprint (`mesh.mesh_fingerprint` — the cache-key contract).
+
+    Attributes:
+      bandwidth_bits: bits per cycle per directed link.
+      hop_latency_cycles: fixed per-hop latency (router traversal).
+      energy_pj_per_byte: per-byte, per-hop transfer energy.
+    """
+
+    bandwidth_bits: int = 256
+    hop_latency_cycles: int = 4
+    energy_pj_per_byte: float = 10.0
+
+    def bytes_per_cycle(self) -> float:
+        return self.bandwidth_bits / 8.0
+
+    def validate(self) -> None:
+        assert self.bandwidth_bits >= 8, self.bandwidth_bits
+        assert self.hop_latency_cycles >= 0, self.hop_latency_cycles
+
+
+# ---------------------------------------------------------------------------
 # Co-design support: area proxy + structural serde (DESIGN.md §Co-design DSE)
 # ---------------------------------------------------------------------------
 

@@ -53,7 +53,15 @@ from repro.core.mapping import Mapping
 #     warm-started and cold solves could coexist, so the bump draws a clean
 #     line: every v5 record states via its key whether a warm start shaped
 #     it. Cold-solve keys are otherwise structurally identical to v4.
-CACHE_VERSION = 5
+# v6: the arch position of the key accepts a `MeshArch` (`core/mesh.py`):
+#     its fingerprint folds in every solver-relevant mesh field — chip
+#     structure, chip count, topology, link bandwidth / hop latency / link
+#     energy (the PR 1 lesson: a solver-relevant field missing from the key
+#     serves stale records — two meshes differing only in link bandwidth
+#     pick different shard choices). Mesh-level records additionally store
+#     the shard decomposition, which v5 keys could never address, and
+#     single-chip keys are unchanged except for the version prefix.
+CACHE_VERSION = 6
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -103,12 +111,17 @@ def _digest(s: str) -> str:
     return hashlib.sha1(s.encode()).hexdigest()[:12]
 
 
-def arch_cache_key(arch: CimArch) -> str:
+def arch_cache_key(arch) -> str:
     """Structural arch key: digests ``arch.arch_fingerprint`` — the name is
     *not* part of the identity, so two archs differing only in LBuf capacity
     (or any other knob) get distinct keys while renamed-but-identical archs
-    share entries (the DSE grid relies on both properties)."""
-    return _digest(arch_fingerprint(arch))
+    share entries (the DSE grid relies on both properties). A `MeshArch`
+    (anything exposing ``fingerprint()``) keys on its own fingerprint, which
+    embeds the chip fingerprint plus chip count, topology and all link
+    fields — duck-typed here so `cache` need not import `mesh`."""
+    fp = (arch_fingerprint(arch) if isinstance(arch, CimArch)
+          else arch.fingerprint())
+    return _digest(fp)
 
 
 def layer_cache_key(layer: wl.Layer) -> str:
@@ -129,7 +142,7 @@ def config_cache_key(cfg) -> str:
     return _digest("|".join(f"{k}={v!r}" for k, v in items))
 
 
-def solve_record_key(mode: str, layer: wl.Layer, arch: CimArch, cfg,
+def solve_record_key(mode: str, layer: wl.Layer, arch, cfg,
                      warm_start: dict | None = None) -> str:
     """``warm_start`` (a mapping JSON injected as a neighbor incumbent —
     incremental DSE re-solves) changes the solver's inputs, so warm-started

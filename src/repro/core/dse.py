@@ -476,3 +476,132 @@ def run_dse(layers: Sequence[wl.Layer],
                      validation=validation,
                      wall_s=round(time.monotonic() - t0, 2),
                      rank_by=rank_by)
+
+
+# ---------------------------------------------------------------------------
+# Mesh DSE: chip-count / link-bandwidth axes (DESIGN.md §Mesh optimization)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpace:
+    """Cartesian grid over `mesh.MeshArch` knobs: chip presets x chip count
+    x link bandwidth/hop latency x topology. ``enumerate()`` yields one
+    validated mesh per grid point (1-chip points included — they ARE the
+    single chip, anchoring the frontier's scaling story). Chips default to
+    the Table-IV preset; pass explicit ``CimArch``es to co-sweep chip
+    geometry with the mesh axes."""
+
+    chips: tuple[CimArch, ...] = dataclasses.field(
+        default_factory=lambda: (default_arch(),))
+    n_chips: tuple[int, ...] = (1, 2, 4)
+    link_bits: tuple[int, ...] = (128, 256)
+    hop_latency: tuple[int, ...] = (4,)
+    topologies: tuple[str, ...] = ("ring",)
+    prefix: str = "mesh"
+
+    @property
+    def size(self) -> int:
+        return (len(self.chips) * len(self.n_chips) * len(self.link_bits) *
+                len(self.hop_latency) * len(self.topologies))
+
+    def enumerate(self) -> list:
+        from repro.core.arch import MeshLink
+        from repro.core.mesh import make_mesh
+        out = []
+        for chip, n, bits, hl, topo in itertools.product(
+                self.chips, self.n_chips, self.link_bits,
+                self.hop_latency, self.topologies):
+            name = (f"{self.prefix}-{chip.name}-n{n}-{topo}"
+                    f"-lb{bits}-hl{hl}")
+            out.append(make_mesh(chip, n,
+                                 link=MeshLink(bandwidth_bits=bits,
+                                               hop_latency_cycles=hl),
+                                 topology=topo, name=name))
+        return out
+
+
+def run_mesh_dse(layers: Sequence[wl.Layer],
+                 counts: Sequence[int] | None,
+                 space: MeshSpace | Sequence,
+                 mode: str = "miredo", *,
+                 per_layer_cap_s: float = 10.0,
+                 total_budget_s: float | None = None,
+                 cache: ResultCache | None = None,
+                 use_cache: bool = True,
+                 workers: int | None = None,
+                 validate_frontier: bool = True,
+                 schedule_boundaries: Sequence[int] | None = None,
+                 verbose: bool = False) -> DseResult:
+    """Sweep a mesh grid against one workload: `run_dse`'s chip-count /
+    link-bandwidth axes. Every mesh point runs through
+    ``optimize_network(mesh=...)`` — 1-chip points take the single-chip
+    path, multi-chip points the sharded mesh pipeline — and the frontier
+    ranks (scheduled cycles, energy, mesh area = n_chips x chip area).
+
+    No screening pass: the mesh grid multiplies a handful of link/count
+    knobs onto each chip, and all sub-layer solves of every mesh sharing a
+    chip hit the same chip-keyed records in the shared cache, so the MIP
+    pass is already incremental where screening would help
+    (``screen_points`` comes back empty, ``survivors`` is the whole grid).
+    Frontier validation checks each record's mapping against the
+    **sub-layer it actually maps** (the shard decomposition) on
+    ``mesh.chip``. Returns a `DseResult` whose ``archs`` values are
+    `mesh.MeshArch` instances."""
+    from repro.core.mesh import shard_sub_layer
+    from repro.core.network import optimize_network
+
+    t0 = time.monotonic()
+    layers = list(layers)
+    counts = [1] * len(layers) if counts is None else list(counts)
+    assert len(counts) == len(layers)
+    grid = space.enumerate() if isinstance(space, MeshSpace) else list(space)
+    names = [m.name for m in grid]
+    assert len(set(names)) == len(names), f"duplicate mesh names: {names}"
+    meshes = {m.name: m for m in grid}
+    cache = cache if cache is not None else (
+        ResultCache() if use_cache else None)
+
+    networks: dict[str, NetworkResult] = {}
+    for m in grid:
+        networks[m.name] = optimize_network(
+            layers, mesh=m, mode=mode, counts=counts, cache=cache,
+            use_cache=use_cache, per_layer_cap_s=per_layer_cap_s,
+            total_budget_s=total_budget_s, workers=workers,
+            schedule_boundaries=schedule_boundaries, verbose=verbose)
+        if verbose:
+            net = networks[m.name]
+            print(f"[mesh-dse] {m.name}: "
+                  f"{(net.scheduled or net.totals)['cycles']:.4g} cycles",
+                  flush=True)
+
+    points = {
+        n: DsePoint(arch_name=n,
+                    cycles=(net.scheduled or net.totals)["cycles"],
+                    energy_pj=(net.scheduled or net.totals)["energy_pj"],
+                    area_bits=meshes[n].n_chips * area_proxy(meshes[n].chip),
+                    fidelity="mip",
+                    serial_cycles=net.totals["cycles"])
+        for n, net in networks.items()}
+    frontier = sorted(pareto_frontier(list(points.values())),
+                      key=lambda p: (p.area_bits, p.cycles))
+
+    validation: dict[str, list[str]] = {}
+    if validate_frontier:
+        for p in frontier:
+            m, errs, seen = meshes[p.arch_name], [], set()
+            for lr in networks[p.arch_name].layers:
+                if lr.key in seen:
+                    continue
+                seen.add(lr.key)
+                shard = lr.record.get("shard") or {}
+                sub = shard_sub_layer(lr.layer,
+                                      shard.get("choice", "replicate"),
+                                      m.n_chips)
+                mp = mapping_from_json(lr.record["mapping"])
+                errs += [f"{lr.layer.name}: {e}"
+                         for e in validate(mp, sub, m.chip)]
+            validation[p.arch_name] = errs
+    return DseResult(archs=meshes, screen_points={}, survivors=list(names),
+                     pruned=[], networks=networks, points=points,
+                     frontier=frontier, validation=validation,
+                     wall_s=round(time.monotonic() - t0, 2))

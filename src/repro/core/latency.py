@@ -28,7 +28,7 @@ import dataclasses
 import math
 
 from repro.core import workload as wl
-from repro.core.arch import CimArch, INPUT, OPERANDS, OUTPUT, WEIGHT
+from repro.core.arch import CimArch, INPUT, MeshLink, OPERANDS, OUTPUT, WEIGHT
 from repro.core.mapping import Mapping, SizeContext
 
 
@@ -229,6 +229,36 @@ def evaluate(mapping: Mapping, layer: wl.Layer,
         temporal_util=min(1.0, ideal / max(total, 1e-9)),
         macs=layer.macs,
     )
+
+
+# ---------------------------------------------------------------------------
+# Inter-chip link transfer terms (mesh extension, DESIGN.md §Mesh optimization)
+# ---------------------------------------------------------------------------
+
+def link_transfer_cycles(bytes_: float, link: MeshLink, hops: int) -> float:
+    """Point-to-point transfer of ``bytes_`` over ``hops`` store-and-forward
+    links: each hop re-serializes the payload at the link bandwidth and pays
+    the fixed router latency. This is the mesh-level analogue of eq. (11) —
+    chunk bytes over effective bandwidth, ceil'd to whole cycles — with the
+    hop count playing the multicast-traffic role the on-chip model charges
+    via ``eff_bw_bytes``. Monotone non-increasing in ``bandwidth_bits`` and
+    exactly zero for zero hops (same-chip transfer)."""
+    if hops <= 0 or bytes_ <= 0:
+        return 0.0
+    per_hop = math.ceil(bytes_ / link.bytes_per_cycle())
+    return float(hops) * (per_hop + link.hop_latency_cycles)
+
+
+def ring_allreduce_cycles(bytes_: float, link: MeshLink,
+                          n_chips: int) -> float:
+    """Ring all-reduce of ``bytes_`` of partial sums across ``n_chips``:
+    2(N-1) steps each moving a 1/N chunk over one link (reduce-scatter +
+    all-gather). Both the ring and the grid topology embed a Hamiltonian
+    ring, so the same bound serves both. Zero for a single chip."""
+    if n_chips <= 1 or bytes_ <= 0:
+        return 0.0
+    chunk = math.ceil(math.ceil(bytes_ / n_chips) / link.bytes_per_cycle())
+    return 2.0 * (n_chips - 1) * (chunk + link.hop_latency_cycles)
 
 
 def idealized_cycles(mapping: Mapping, layer: wl.Layer,

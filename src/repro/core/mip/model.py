@@ -190,6 +190,17 @@ class MipModel:
             self.add_eq(e - active, 0.0)
         return vs
 
+    def add_choice(self, prefix: str, options: Sequence) -> dict:
+        """One-hot selection over arbitrary hashable options: one binary
+        per option, exactly one active. Returns ``{option: Var}`` so
+        callers index by the option itself (e.g. a ``(chip, cores)`` pair
+        — the mesh placement MIP, `scheduler.schedule_mesh`) instead of a
+        positional list."""
+        vs = {opt: self.add_binary(f"{prefix}[{opt}]") for opt in options}
+        assert len(vs) == len(options), f"duplicate options in {prefix}"
+        self.add_eq(sum(vs.values(), LinExpr({}, 0.0)), 1.0)
+        return vs
+
     # ---- objective -----------------------------------------------------------
     def minimize(self, expr) -> None:
         e = LinExpr.of(expr)

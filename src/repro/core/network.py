@@ -202,8 +202,9 @@ def _solve_job(args):
     return solve_layer(layer, arch, mode, cfg, warm_start=ws)
 
 
-def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
+def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
                      mode: str = "miredo", *,
+                     mesh=None,
                      counts: Sequence[int] | None = None,
                      cfg=None,
                      total_budget_s: float | None = None,
@@ -216,6 +217,13 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
                      warm_starts: dict[str, dict] | None = None,
                      verbose: bool = False) -> NetworkResult:
     """Optimize every layer of a network and aggregate latency/energy/EDP.
+
+    ``mesh`` (a `mesh.MeshArch`, mutually exclusive with ``arch``) targets
+    a multi-chip mesh: ``n_chips > 1`` dispatches to
+    `mesh.optimize_mesh_network` (per-layer TP sharding + the (chip, core)
+    placement scheduler); a **1-chip mesh IS its chip** — the call
+    continues below on ``mesh.chip``, taking the single-chip path bit for
+    bit (the invariant `tests/test_mesh.py` pins).
 
     ``warm_starts`` maps `layer_cache_key` -> mapping JSON; for MIP modes
     each matching unique layer's solve receives that mapping as an extra
@@ -245,6 +253,20 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch,
     """
     from repro.core.energy import evaluate_edp
     from repro.core.formulation import FormulationConfig
+
+    if mesh is not None:
+        assert arch is None, "pass either arch or mesh, not both"
+        if mesh.n_chips > 1:
+            from repro.core.mesh import optimize_mesh_network
+            return optimize_mesh_network(
+                layers, mesh, mode, counts=counts, cfg=cfg,
+                total_budget_s=total_budget_s,
+                per_layer_cap_s=per_layer_cap_s, workers=workers,
+                cache=cache, use_cache=use_cache, schedule=schedule,
+                schedule_boundaries=schedule_boundaries,
+                warm_starts=warm_starts, verbose=verbose)
+        arch = mesh.chip
+    assert arch is not None, "either arch or mesh is required"
 
     t0 = time.monotonic()
     layers = list(layers)

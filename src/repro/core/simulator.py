@@ -206,7 +206,7 @@ class SegmentSimReport:
     stage_finish: list[float]   # per stage, its last item's completion time
 
 
-def stream_finish_times(counts, ts, ready) -> list[float]:
+def stream_finish_times(counts, ts, ready, xfer=None) -> list[float]:
     """Last-item finish time per stage of the index-matched item stream:
     item k of stage i starts after item k-1 on the same stage AND item
     min(k, count_{i-1}-1) of the upstream stage, each item taking ``ts[i]``
@@ -214,16 +214,24 @@ def stream_finish_times(counts, ts, ready) -> list[float]:
     the segment dependency structure — `simulate_segment` replays it with
     bus-serialized ready times, and the scheduler charges its segments
     with the zero-ready evaluation (`scheduler`), so the two can never
-    encode different pipelines."""
+    encode different pipelines.
+
+    ``xfer`` (mesh network mode) is a per-stage inter-chip activation
+    transfer: when adjacent stages of a segment live on different chips,
+    the upstream item must additionally cross ``xfer[i]`` cycles of links
+    before stage i may consume it (`latency.link_transfer_cycles` over the
+    host-chip distance — `scheduler.schedule_mesh`). ``None`` or all-zero
+    is exactly the single-chip recursion."""
     finish_prev: list[float] | None = None
     out: list[float] = []
-    for n, t, rdy in zip(counts, ts, ready):
+    xfer = [0.0] * len(counts) if xfer is None else list(xfer)
+    for n, t, rdy, x in zip(counts, ts, ready, xfer):
         fin = [0.0] * n
         cur = float(rdy)
         for k in range(n):
             dep = 0.0
             if finish_prev is not None:
-                dep = finish_prev[min(k, len(finish_prev) - 1)]
+                dep = finish_prev[min(k, len(finish_prev) - 1)] + x
             fin[k] = max(cur, dep) + t
             cur = fin[k]
         finish_prev = fin
@@ -241,8 +249,11 @@ def simulate_segment(stages, arch: CimArch,
     ``stages`` is an ordered sequence of ``(count, t_cycles, load_bytes)``
     triples (what `scheduler.SegmentPlan` stages carry): ``count`` items of
     ``t_cycles`` each, with ``load_bytes`` of weights programmed into the
-    stage's macros before its first item. Mechanics, reusing the single-layer
-    machinery's conventions:
+    stage's macros before its first item. Mesh network mode appends a 4th
+    element, ``xfer_cycles``: the per-item inter-chip activation hop from
+    the upstream stage's host chip (`scheduler.schedule_mesh`), threaded
+    into the item recursion via `stream_finish_times`' ``xfer``.
+    Mechanics, reusing the single-layer machinery's conventions:
 
       * every weight program-in is a `Hop` (DRAM -> macro, macro-reload) and
         all of them serialize on the DRAM bus channel (``chan_free[0]``,
@@ -259,13 +270,14 @@ def simulate_segment(stages, arch: CimArch,
     while later stages' weights still stream, so it never finishes later;
     agreement within the Fig. 4(a) tolerance is what
     `scheduler.cross_check` asserts."""
-    stages = [(int(n), float(t), int(b)) for n, t, b in stages]
-    if sum(n for n, _, _ in stages) > max_items:
+    stages = [(int(s[0]), float(s[1]), int(s[2]),
+               float(s[3]) if len(s) > 3 else 0.0) for s in stages]
+    if sum(n for n, _, _, _ in stages) > max_items:
         raise ValueError(f"segment items exceed max_items {max_items}")
     bw = arch.level(0).bytes_per_cycle()
     chan_free = [0.0] * arch.n_levels
     hops = [Hop(WEIGHT, 0, arch.macro_level, math.ceil(b / bw), (),
-                False, True) for _, _, b in stages]
+                False, True) for _, _, b, _ in stages]
     ready: list[float] = []
     for hop in hops:
         start = chan_free[hop.src]
@@ -274,7 +286,8 @@ def simulate_segment(stages, arch: CimArch,
     load_cycles = chan_free[0]
 
     stage_finish = stream_finish_times(
-        [n for n, _, _ in stages], [t for _, t, _ in stages], ready)
+        [n for n, _, _, _ in stages], [t for _, t, _, _ in stages], ready,
+        xfer=[x for _, _, _, x in stages])
     total = max(stage_finish + [load_cycles])
     return SegmentSimReport(total_cycles=total, load_cycles=load_cycles,
                             stage_finish=stage_finish)

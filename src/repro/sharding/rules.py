@@ -179,6 +179,59 @@ class ShardingPlan:
         return P()
 
 
+#: Mesh shard-choice names (kept string-identical to `core/mesh.py`'s
+#: constants; asserted in tests/test_mesh.py so they cannot drift).
+m_REPLICATE = "replicate"
+m_SPLIT_N = "split_n"
+m_SPLIT_K = "split_k"
+
+
+def mesh_tp_choices(n_chips: int, *, out_channels: int, reduce_dim: int,
+                    n_heads: int | None = None,
+                    n_experts: int | None = None) -> tuple[str, ...]:
+    """Valid CIM-mesh shard choices for one canonical layer, under the same
+    divisibility discipline `make_plan` applies per tensor class — the
+    mesh path (`core/mesh.py`) resolves its per-layer TP choices here so
+    the JAX-side rules and the analytical mesh model can never disagree
+    on when TP engages.
+
+    Returned names (preference order): ``replicate`` (always — the
+    fully-FSDP / replicated-compute fallback analog, the layer whole on
+    one chip), ``split_n`` (TP over output channels — attention heads for
+    qkv/o projections, FFN hidden for MLPs; the `attn_tp` rule) and
+    ``split_k`` (TP over the reduction dim with a partial-sum all-reduce).
+
+    Fallback semantics, mirroring `make_plan`:
+      * ``n_heads`` given and ``n_heads % n_chips != 0`` → the `attn_tp`
+        rule fails, both splits are withheld (splitting inside a head
+        misaligns attention compute — the rules replicate instead of
+        raising), leaving ``("replicate",)``.
+      * ``n_experts`` given and ``n_experts % n_chips == 0`` → expert
+        parallelism: whole expert GEMMs distribute across chips as
+        replicated instances (the mesh placement layer spreads the
+        ``count=E`` instances), so no intra-GEMM split is offered.
+      * ``n_experts`` given and ``E % n_chips != 0`` → the `moe_ep` rule
+        fails and falls back to TP *inside* each expert (the
+        ``P(None, "data", "model")`` branch): splits by plain
+        divisibility, ``replicate`` when neither divides.
+
+    Pure arithmetic — no jax objects — so the mesh path can resolve
+    choices without building a device mesh."""
+    choices = [m_REPLICATE]
+    if n_chips <= 1:
+        return tuple(choices)
+    if n_heads is not None and (n_heads <= 0 or n_heads % n_chips != 0):
+        return tuple(choices)
+    if n_experts is not None and n_experts > 0 and \
+            n_experts % n_chips == 0:
+        return tuple(choices)
+    if out_channels % n_chips == 0 and out_channels >= n_chips:
+        choices.append(m_SPLIT_N)
+    if reduce_dim % n_chips == 0 and reduce_dim >= n_chips:
+        choices.append(m_SPLIT_K)
+    return tuple(choices)
+
+
 def make_plan(mesh: Mesh, cfg: ModelConfig, shape: ShapeSpec) -> ShardingPlan:
     axes = mesh.axis_names
     model_axis = "model"

@@ -1,0 +1,354 @@
+"""Property/differential tests for the multi-chip mesh layer
+(`core/mesh.py`, `scheduler.schedule_mesh`, DESIGN.md §Mesh optimization).
+
+Properties (hypothesis when available, else the seeded shim from
+``tests/test_mapping_fuzz.py``):
+
+  * **N=1 identity** — ``optimize_network(mesh=MeshArch(chip, 1))`` is the
+    single-chip path bit for bit: totals, per-layer records AND the
+    schedule.
+  * **Link-bandwidth monotonicity** — every per-layer mesh record's cycles
+    are monotone non-increasing in the link bandwidth (the min over shard
+    choices of monotone per-choice curves).
+  * **Residency capacity** — no pipelined mesh segment ever over-commits a
+    chip's macro bytes or its core budget.
+  * **MIP >= greedy** — the (chip, core) placement MIP never schedules
+    worse than the greedy water-filling placement (both judged by the
+    scheduled end-to-end cycles, the metric segments are billed with).
+
+Differential: the mesh schedule's analytical segment model against the
+event replay (`simulator.simulate_segment` network mode with inter-chip
+xfer), gated at the Fig. 4(a) 0.8 mean-agreement floor
+(`scheduler.cross_check_mesh` — the same tolerance `scheduler.cross_check`
+uses on the single-chip path).
+
+Pinned regressions: `sharding.rules.mesh_tp_choices` fallbacks (attention
+heads not divisible, MoE ``E % n != 0``) resolve to valid chip-replicated
+placements instead of raising, and the CACHE_VERSION-6 key separation for
+meshes differing only in link bandwidth.
+"""
+
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # seeded fallback
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(lambda rng: rng.choice(list(seq)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: rng.random() < 0.5)
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(fn, "_max_examples", 25)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+from repro.core import workload as wl
+from repro.core.arch import MeshLink, default_arch
+from repro.core.cache import (ResultCache, arch_cache_key, layer_cache_key,
+                              solve_record_key)
+from repro.core.formulation import FormulationConfig
+from repro.core.mesh import (REPLICATE, SHARD_CHOICES, SPLIT_K, SPLIT_N,
+                             MeshArch, make_mesh, optimize_mesh_network,
+                             residency_feasible, shard_choices,
+                             shard_sub_layer)
+from repro.core.network import optimize_network
+from repro.core.scheduler import (chip_macro_bytes, cross_check_mesh,
+                                  schedule_mesh)
+
+#: Tiny chip (the fuzz grid's) so greedy solves and schedules stay cheap.
+CHIP = default_arch(n_cores=2, macro_rows=64, macro_cols=16, gbuf_kb=2.0,
+                    lbuf_kb=8.0, name="mesh-tiny")
+
+#: Dims divisible by 2 and 4 so both TP splits stay available.
+M_CHOICES = (4, 8, 16, 24)
+KC_CHOICES = (16, 32, 48, 96)
+
+
+def _workload(seed: int, n_layers: int):
+    rng = random.Random(seed)
+    layers = [wl.gemm(f"mz{i}", rng.choice(M_CHOICES),
+                      rng.choice(KC_CHOICES), rng.choice(KC_CHOICES))
+              for i in range(n_layers)]
+    counts = [rng.choice((1, 1, 2, 3)) for _ in layers]
+    return layers, counts
+
+
+def _opt(layers, counts, mesh, **kw):
+    return optimize_network(layers, mesh=mesh, mode="greedy",
+                            counts=counts, use_cache=False, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Property: N=1 mesh == single chip, bit for bit
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_n1_mesh_is_single_chip(seed, n_layers):
+    layers, counts = _workload(seed, n_layers)
+    single = optimize_network(layers, CHIP, "greedy", counts=counts,
+                              use_cache=False)
+    meshed = _opt(layers, counts, make_mesh(CHIP, 1))
+    assert meshed.totals == single.totals
+    assert meshed.scheduled == single.scheduled
+    assert meshed.arch_name == single.arch_name == CHIP.name
+    for a, b in zip(meshed.layers, single.layers):
+        assert a.record == b.record
+    sa, sb = meshed.schedule, single.schedule
+    assert sa.scheduled_cycles == sb.scheduled_cycles
+    assert [seg.mode for seg in sa.segments] == \
+        [seg.mode for seg in sb.segments]
+
+
+def test_schedule_mesh_n1_delegates():
+    layers, counts = _workload(7, 3)
+    net = optimize_network(layers, CHIP, "greedy", counts=counts,
+                           use_cache=False, schedule=False)
+    direct = schedule_mesh(net.layers, make_mesh(CHIP, 1))
+    single = optimize_network(layers, CHIP, "greedy", counts=counts,
+                              use_cache=False).schedule
+    assert direct.scheduled_cycles == single.scheduled_cycles
+    assert direct.arch_name == CHIP.name
+
+
+# ---------------------------------------------------------------------------
+# Property: per-layer mesh cycles monotone non-increasing in link bandwidth
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(1, 3),
+       st.sampled_from((2, 4)), st.sampled_from(("ring", "grid")))
+def test_cycles_monotone_in_link_bandwidth(seed, n_layers, n_chips, topo):
+    layers, counts = _workload(seed, n_layers)
+    prev = None
+    for bits in (32, 64, 256, 1024):
+        mesh = make_mesh(CHIP, n_chips, topology=topo,
+                         link=MeshLink(bandwidth_bits=bits))
+        net = _opt(layers, counts, mesh, schedule=False)
+        cycles = [lr.record["cycles"] for lr in net.layers]
+        if prev is not None:
+            for lo, hi, lr in zip(cycles, prev, net.layers):
+                assert lo <= hi + 1e-9, \
+                    (bits, lr.layer.name, lr.record["shard"], lo, hi)
+        prev = cycles
+
+
+# ---------------------------------------------------------------------------
+# Property: packed segments respect per-chip residency + core budgets
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.sampled_from((2, 4)))
+def test_chip_residency_never_exceeded(seed, n_layers, n_chips):
+    layers, counts = _workload(seed, n_layers)
+    mesh = make_mesh(CHIP, n_chips)
+    net = _opt(layers, counts, mesh)
+    cap = chip_macro_bytes(CHIP)
+    n_cores = 2
+    for seg in net.schedule.segments:
+        if seg.mode != "pipelined":
+            continue
+        used_b = [0] * n_chips
+        used_c = [0] * n_chips
+        for stp in seg.stages:
+            if stp.span_all:
+                for g in range(n_chips):
+                    used_b[g] += stp.load_bytes
+                    used_c[g] += stp.cores
+            else:
+                assert 0 <= stp.chip < n_chips, stp
+                used_b[stp.chip] += stp.load_bytes
+                used_c[stp.chip] += stp.cores
+        assert all(b <= cap for b in used_b), (used_b, cap)
+        assert all(c <= n_cores for c in used_c), used_c
+
+
+# ---------------------------------------------------------------------------
+# Property: placement MIP never worse than greedy water-filling
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=6)
+@given(st.integers(0, 10_000), st.integers(2, 5), st.sampled_from((2, 4)))
+def test_placement_mip_never_worse_than_greedy(seed, n_layers, n_chips):
+    pytest.importorskip("scipy")
+    layers, counts = _workload(seed, n_layers)
+    mesh = make_mesh(CHIP, n_chips)
+    net = _opt(layers, counts, mesh, schedule=False)
+    mip = schedule_mesh(net.layers, mesh, use_mip=True)
+    greedy = schedule_mesh(net.layers, mesh, use_mip=False)
+    assert mip.scheduled_cycles <= greedy.scheduled_cycles + 1e-6
+    assert mip.scheduled_cycles <= mip.serial_cycles + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Differential: analytical mesh segments vs event replay (Fig. 4(a) gate)
+# ---------------------------------------------------------------------------
+
+def test_mesh_sim_agreement():
+    layers = [wl.gemm("s0", 8, 16, 32), wl.gemm("s1", 8, 32, 16),
+              wl.gemm("s2", 8, 16, 16), wl.gemm("s3", 8, 8, 32)]
+    counts = [1, 1, 2, 1]
+    checked = 0
+    for n_chips in (2, 4):
+        mesh = make_mesh(CHIP, n_chips)
+        net = _opt(layers, counts, mesh)
+        acc, n = cross_check_mesh(net.schedule, mesh)
+        checked += n
+        assert acc >= 0.8, (n_chips, acc)    # the fig4a tolerance
+    assert checked >= 1, "no pipelined mesh segment was replayed"
+
+
+# ---------------------------------------------------------------------------
+# Pinned: sharding-rule fallbacks resolve to valid placements
+# ---------------------------------------------------------------------------
+
+def test_rules_constants_identical():
+    from repro.sharding import rules
+    assert (rules.m_REPLICATE, rules.m_SPLIT_N, rules.m_SPLIT_K) == \
+        SHARD_CHOICES == (REPLICATE, SPLIT_N, SPLIT_K)
+
+
+def test_mesh_tp_choices_pinned():
+    from repro.sharding.rules import mesh_tp_choices
+    # plain divisibility: both splits offered
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=96) == \
+        (REPLICATE, SPLIT_N, SPLIT_K)
+    # only one dim divides
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=50) == \
+        (REPLICATE, SPLIT_N)
+    assert mesh_tp_choices(4, out_channels=50, reduce_dim=96) == \
+        (REPLICATE, SPLIT_K)
+    # 1 chip: no TP
+    assert mesh_tp_choices(1, out_channels=96, reduce_dim=96) == (REPLICATE,)
+    # attention heads not divisible -> replicate-only fallback (attn_tp)
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=96,
+                           n_heads=6) == (REPLICATE,)
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=96,
+                           n_heads=8) == (REPLICATE, SPLIT_N, SPLIT_K)
+    # MoE E % n == 0 -> EP as replicated instances, no intra-GEMM split
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=96,
+                           n_experts=8) == (REPLICATE,)
+    # MoE E % n != 0 -> TP inside experts by plain divisibility
+    assert mesh_tp_choices(4, out_channels=96, reduce_dim=96,
+                           n_experts=6) == (REPLICATE, SPLIT_N, SPLIT_K)
+
+
+def test_fallback_yields_valid_replicated_record():
+    # indivisible dims: the mesh path must produce a valid chip-replicated
+    # record instead of raising
+    layer = wl.gemm("odd", 8, 50, 50)      # 50 % 4 != 0 on both split dims
+    mesh = make_mesh(CHIP, 4)
+    assert shard_choices(layer, mesh) == (REPLICATE,)
+    assert shard_choices(layer, mesh, n_heads=6) == (REPLICATE,)
+    net = _opt([layer], [1], mesh)
+    rec = net.layers[0].record
+    assert rec["shard"]["choice"] == REPLICATE
+    assert rec["shard"]["n_active"] == 1
+    assert rec["comm_cycles"] == 0.0
+    assert rec["cycles"] == rec["chip_cycles"]
+    # sub layer of a replicate shard IS the layer
+    assert shard_sub_layer(layer, REPLICATE, 4) is layer
+
+
+# ---------------------------------------------------------------------------
+# Pinned: cache key separation (CACHE_VERSION 6 mesh fields)
+# ---------------------------------------------------------------------------
+
+def test_cache_key_separation_link_bandwidth(tmp_path):
+    layer = wl.gemm("ck", 8, 32, 32)
+    cfg = FormulationConfig(time_limit_s=1.0)
+    mesh_a = make_mesh(CHIP, 2, link=MeshLink(bandwidth_bits=128))
+    mesh_b = make_mesh(CHIP, 2, link=MeshLink(bandwidth_bits=256))
+    # two meshes differing ONLY in link bandwidth never share records
+    assert arch_cache_key(mesh_a) != arch_cache_key(mesh_b)
+    ka = solve_record_key("greedy", layer, mesh_a, cfg)
+    kb = solve_record_key("greedy", layer, mesh_b, cfg)
+    assert ka != kb
+    # ... and the mesh key is not the chip key either
+    assert arch_cache_key(mesh_a) != arch_cache_key(CHIP)
+    # deterministic: same structural mesh (name differs) -> same key
+    mesh_a2 = make_mesh(CHIP, 2, link=MeshLink(bandwidth_bits=128),
+                        name="other-name")
+    assert solve_record_key("greedy", layer, mesh_a2, cfg) == ka
+    # ResultCache isolation end to end
+    cache = ResultCache(tmp_path)
+    cache.put(ka, {"cycles": 1.0})
+    assert cache.get(ka) == {"cycles": 1.0}
+    assert cache.get(kb) is None
+
+
+def test_mesh_record_caching_roundtrip(tmp_path):
+    layers, counts = _workload(3, 2)
+    mesh = make_mesh(CHIP, 2)
+    cache = ResultCache(tmp_path)
+    r1 = optimize_mesh_network(layers, mesh, "greedy", counts=counts,
+                               cache=cache, schedule=False)
+    assert r1.n_solved == r1.n_unique
+    r2 = optimize_mesh_network(layers, mesh, "greedy", counts=counts,
+                               cache=cache, schedule=False)
+    assert r2.cache_hits == r2.n_unique and r2.n_solved == 0
+    assert r2.totals == r1.totals
+    for a, b in zip(r2.layers, r1.layers):
+        assert a.record == b.record
+
+
+# ---------------------------------------------------------------------------
+# Geometry + feasibility sanity
+# ---------------------------------------------------------------------------
+
+def test_mesh_geometry():
+    ring = make_mesh(CHIP, 4, topology="ring")
+    assert ring.chip_distance(0, 3) == 1          # wraparound
+    assert ring.chip_distance(0, 2) == 2
+    assert ring.bcast_hops() == 2
+    grid = make_mesh(CHIP, 4, topology="grid")
+    assert grid.grid_dims() == (2, 2)
+    assert grid.chip_distance(0, 3) == 2          # manhattan
+    assert grid.bcast_hops() == 2
+    with pytest.raises(AssertionError):
+        MeshArch(chip=CHIP, n_chips=0).validate()
+    with pytest.raises(AssertionError):
+        MeshArch(chip=CHIP, n_chips=2, topology="torus").validate()
+
+
+def test_residency_feasibility_scaling():
+    # weights sized to overflow 1 chip and fit 2
+    cap = chip_macro_bytes(CHIP)
+    k = 32
+    n_layers = cap // (k * k) + 1
+    layers = [wl.gemm(f"rf{i}", 4, k, k) for i in range(n_layers)]
+    assert not residency_feasible(layers, None, make_mesh(CHIP, 1))
+    assert residency_feasible(layers, None, make_mesh(CHIP, 2))
