@@ -25,7 +25,11 @@ Registered as the ``exec`` job in ``benchmarks.run``; standalone CLI:
 
 ``--reduced`` is the CI acceptance path (exec-smoke): every executed
 kernel output must match its reference, the pooled rank correlation must
-clear ``RANK_FLOOR``, and all three kernel families must have run.
+clear ``RANK_FLOOR``, all three kernel families must have run, and every
+model must have executed at least one wGrad GEMM (the ``exec_train``
+scenario lowers a training step, so the backward pass — transposed-
+operand block selection on `kernels/matmul_int8` — is on the CI
+critical path too).
 """
 
 from __future__ import annotations
@@ -46,6 +50,10 @@ EXEC_SHAPES = {
                               kind="prefill"),
     "exec_decode": ShapeSpec("exec_decode", seq_len=256, global_batch=16,
                              kind="decode"),
+    # one training step: the backward pass (dGrad/wGrad, transposed-
+    # operand block selection) reaches matmul_int8 and the numerics oracle
+    "exec_train": ShapeSpec("exec_train", seq_len=64, global_batch=1,
+                            kind="train"),
 }
 #: Reduced-mode model subset: one attention family + one SSD family keeps
 #: every kernel dispatch path on the CI critical path.
@@ -83,6 +91,7 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
 
     rows, table, pooled = [], [], []
     kernels_seen: set[str] = set()
+    wgrad_covered: set[str] = set()   # models that executed a wGrad GEMM
     pool_seen: set = set()     # structural op keys: unique ACROSS rows too
     exec_memo: dict = {}       # shared measurements (same settings per run)
     for aid in arch_ids:
@@ -111,6 +120,8 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
                 pool_seen.add(op.key)
                 pooled.append((op.predicted_cycles, op.measured_s))
             kernels_seen |= {op.kernel for op in plan.ops}
+            if any(op.name.endswith(".wgrad") for op in plan.ops):
+                wgrad_covered.add(aid)
             rows.append({
                 "model": aid, "scenario": sname, "ops": rep.n_ops,
                 "unique": rep.n_unique,
@@ -148,7 +159,8 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
     payload = {"mode": mode, "interpret": interpret, "rows": rows,
                "pooled_rank_corr": pooled_rank,
                "n_rank_points": len(pooled),
-               "kernels": sorted(kernels_seen)}
+               "kernels": sorted(kernels_seen),
+               "wgrad_covered": sorted(wgrad_covered)}
     write_report("exec_lm", payload)
 
     # --reduced is the CI acceptance path (exec-smoke): enforce the
@@ -183,6 +195,12 @@ def run(budget_s: float = 45.0, quick: bool = False, reduced: bool = False,
         if full_pool and missing:
             raise RuntimeError(f"kernel families never dispatched: "
                                f"{sorted(missing)}")
+        no_wgrad = set(arch_ids) - wgrad_covered
+        if full_pool and no_wgrad:
+            raise RuntimeError(
+                f"models that never executed a wGrad GEMM: "
+                f"{sorted(no_wgrad)} — the exec_train scenario must cover "
+                f"a backward kernel per model")
     return payload
 
 

@@ -8,9 +8,11 @@ dataflow co-design Pareto frontier, ``benchmarks/dse_pareto.py``), the
 ``benchmarks/sched_lm.py``), the ``serve`` job (request-level serving
 under traffic with continuous batching, ``benchmarks/serve_sim.py``) and
 the ``exec`` job (optimized plans executed on the Pallas kernels,
-predicted vs measured, ``benchmarks/exec_lm.py``) and the ``mesh`` job
+predicted vs measured, ``benchmarks/exec_lm.py``), the ``mesh`` job
 (multi-chip mesh scaling with TP sharding and (chip, core) placement,
-``benchmarks/mesh_scaling.py``).
+``benchmarks/mesh_scaling.py``) and the ``train`` job (training
+workloads: backward-pass + optimizer-step lowering with per-model
+fwd/bwd/update splits, ``benchmarks/train_lm_workloads.py``).
 ``--quick`` trims solve budgets; results cache under reports/cache so
 reruns are incremental, and ``--cache-dir`` points the solve-record cache
 at a persistent location shared across runs/machines (equivalent to
@@ -35,7 +37,7 @@ def main(argv=None):
     ap.add_argument("--only", default="",
                     help="comma list: fig4a,fig4b,fig4c,fig5a,fig5bcd,"
                          "flexfact,bridge,lm,dse,sched,serve,exec,optspeed,"
-                         "mesh")
+                         "mesh,train")
     ap.add_argument("--cache-dir", default="",
                     help="persistent solve-record cache directory (sets "
                          "MIREDO_CACHE; default reports/cache)")
@@ -55,7 +57,8 @@ def main(argv=None):
                             fig4b_utilization_edp, fig4c_per_layer,
                             fig5a_models, fig5bcd_hw_sweep, lm_models,
                             mesh_scaling, opt_speed, sched_lm, serve_sim,
-                            tab_flexfact, tpu_bridge_bench)
+                            tab_flexfact, tpu_bridge_bench,
+                            train_lm_workloads)
 
     jobs = [
         ("fig4a", lambda: fig4a_model_accuracy.run(
@@ -91,6 +94,12 @@ def main(argv=None):
         # (benchmarks/mesh_scaling.py).
         ("mesh", lambda: mesh_scaling.run(budget_s=budget, quick=args.quick,
                                           reduced=args.reduced)),
+        # Training workloads: backward-pass + optimizer-step lowering,
+        # per-model fwd/dGrad/wGrad/update cycle splits and the layers
+        # whose optimal backward dataflow differs from the forward's
+        # (benchmarks/train_lm_workloads.py).
+        ("train", lambda: train_lm_workloads.run(
+            budget_s=budget, quick=args.quick, reduced=args.reduced)),
     ]
     # A typo'd --only used to run zero jobs and still print "All benchmarks
     # complete" with exit 0 — validate against the job list instead.

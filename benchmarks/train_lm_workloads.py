@@ -1,0 +1,214 @@
+"""Training workloads: forward + backward + optimizer step through the
+network pipeline (`core/training.py`, DESIGN.md §Training frontend).
+
+Each row lowers one reduced registry model under a ``kind="train"``
+scenario — every forward weight-GEMM expanded into its dGrad/wGrad pair
+plus the once-per-step optimizer bill — solves the whole stream with the
+per-layer MIP, and reports the per-model fwd / dGrad / wGrad / update
+cycle split. The headline: the layers where the MIP-optimal *backward*
+dataflow differs from the forward layer's (role-space signatures,
+`training.backward_dataflow_diffs`) — the reason backward GEMMs get
+their own solves instead of reusing the forward mapping transposed. A
+side row runs one model on a small mesh so the FSDP gradient shard
+choices (`sharding.rules.mesh_grad_choices`) engage end to end.
+
+Registered as the ``train`` job in ``benchmarks.run``; standalone CLI:
+
+    PYTHONPATH=src python -m benchmarks.train_lm_workloads --reduced
+
+``--reduced`` is the CI acceptance path (train-smoke) and enforces the
+training contract instead of warning:
+
+  * backward GEMM MACs match the closed form exactly per model
+    (dense/ssm: exactly 2x the forward GEMM MACs — the embedding gather
+    is zero-MAC on both sides; MoE: minus the un-hit routed experts'
+    wGrad share);
+  * >= 1 layer in the run where the optimal wGrad dataflow differs from
+    its forward layer's;
+  * scheduled <= serial for every model (written-residency wGrad
+    segments must not break the pipelining bound);
+  * the 1-chip mesh training run reproduces the single-chip result bit
+    for bit (totals AND schedule).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import md_table, write_report
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core.arch import default_arch
+from repro.core.mesh import make_mesh
+from repro.core.network import optimize_network
+from repro.core.training import (backward_dataflow_diffs, cycle_splits,
+                                 optimizer_update_cost, phase_of,
+                                 routed_hit_experts)
+
+#: Quick-mode per-layer MIP cap (same spirit as benchmarks/sched_lm.py).
+QUICK_CAP_S = 2.0
+#: One reduced model per weight-GEMM family shape: dense (tied head),
+#: top-k MoE (hit-expert wGrad scaling), SSD (activation-activation
+#: backward ops, no optimizer state).
+REDUCED_ARCHS = ("minicpm-2b", "qwen2-moe-a2.7b", "mamba2-1.3b")
+#: Mesh side row: chips for the FSDP gradient-shard demonstration.
+MESH_CHIPS = 2
+
+
+def train_spec(reduced: bool) -> ShapeSpec:
+    """Benchmark-sized training cell: reduced runs use a CPU-sized step
+    (64 tokens x 2 sequences — small enough that the MoE row exercises
+    the partial-hit wGrad path at full top_k)."""
+    if reduced:
+        return ShapeSpec("train_red", 64, 2, "train")
+    return ShapeSpec("train_1k", 1_024, 8, "train")
+
+
+def closed_form_bwd_macs(cfg, spec, forward) -> int:
+    """Backward MACs from the forward stream alone (independent of the
+    backward-emission code path): dGrad + wGrad each mirror their forward
+    GEMM's MACs, except routed MoE wGrads scale to the experts hit."""
+    total = 0
+    n_exp = cfg.n_experts
+    n_hit = routed_hit_experts(cfg, spec.m_tokens)
+    for layer, count in forward:
+        total += 2 * layer.macs * count          # dGrad + wGrad
+        if n_hit and ".exp." in layer.name:
+            total -= layer.macs * (count - count // n_exp * n_hit)
+    return total
+
+
+def run(budget_s: float = 60.0, quick: bool = False, reduced: bool = False,
+        mode: str = "miredo", workers: int | None = None) -> dict:
+    quick = quick or reduced
+    cap = min(QUICK_CAP_S, budget_s) if quick else budget_s
+    chip = default_arch()
+    spec = train_spec(reduced or quick)
+
+    rows, table, diff_rows = [], [], []
+    nets = {}
+    for aid in REDUCED_ARCHS:
+        cfg = get_config(aid).reduced() if (reduced or quick) \
+            else get_config(aid)
+        from repro.core.frontend import extract_workload
+        work = extract_workload(cfg, spec)
+        fwd = [(l, c) for l, c in zip(work.layers, work.counts)
+               if phase_of(l) == "fwd"]
+        bwd_macs = sum(l.macs * c for l, c in zip(work.layers, work.counts)
+                       if phase_of(l) != "fwd")
+        expected = closed_form_bwd_macs(cfg, spec, fwd)
+
+        net = optimize_network(list(work.layers), chip, mode,
+                               counts=list(work.counts),
+                               per_layer_cap_s=cap, workers=workers)
+        nets[aid] = net
+        splits = cycle_splits(net)
+        update = optimizer_update_cost(fwd, chip, inst=spec.instance_count)
+        diffs = backward_dataflow_diffs(net)
+        n_differ = sum(d["differs"] for d in diffs)
+        diff_rows += [{"model": aid, **d} for d in diffs]
+        s = net.scheduled
+        rows.append({
+            "model": aid, "n_layers": len(work), "n_unique": work.n_unique,
+            "bwd_macs": bwd_macs, "bwd_macs_closed_form": expected,
+            "splits": splits,
+            "update": {"n_params": update.n_params,
+                       "dram_bytes": update.dram_bytes,
+                       "cycles": update.cycles,
+                       "energy_pj": update.energy_pj},
+            "serial_cycles": s["serial_cycles"],
+            "scheduled_cycles": s["cycles"],
+            "step_cycles": s["cycles"] + update.total_cycles,
+            "n_wgrad_pairs": len(diffs), "n_dataflow_differ": n_differ,
+        })
+        table.append([aid, len(work),
+                      f"{splits['fwd']:.4g}", f"{splits['dgrad']:.4g}",
+                      f"{splits['wgrad']:.4g}", f"{update.cycles:.4g}",
+                      f"{s['cycles']:.4g}", f"{n_differ}/{len(diffs)}"])
+
+    headers = ["model", "gemms", "fwd cyc", "dgrad cyc", "wgrad cyc",
+               "update cyc", "sched cyc", "bwd dataflow differs"]
+    print(md_table(headers, table))
+    for d in diff_rows:
+        if d["differs"]:
+            print(f"[train/{mode}] {d['model']}: {d['layer']} wGrad "
+                  f"dataflow differs from forward")
+
+    # FSDP side row: one model on a small mesh — the wGrad layers route
+    # through the gradient shard rules and the update gains the ring
+    # all-reduce term.
+    aid = REDUCED_ARCHS[0]
+    cfg = get_config(aid).reduced() if (reduced or quick) \
+        else get_config(aid)
+    from repro.core.frontend import extract_workload
+    work = extract_workload(cfg, spec)
+    fwd = [(l, c) for l, c in zip(work.layers, work.counts)
+           if phase_of(l) == "fwd"]
+    mesh = make_mesh(chip, MESH_CHIPS)
+    mnet = optimize_network(list(work.layers), mesh=mesh, mode=mode,
+                            counts=list(work.counts), per_layer_cap_s=cap,
+                            workers=workers)
+    mupdate = optimizer_update_cost(fwd, mesh, inst=spec.instance_count)
+    wgrad_shards = sorted({lr.record["shard"]["choice"]
+                           for lr in mnet.layers
+                           if phase_of(lr.layer) == "wgrad"})
+    mesh_row = {"model": aid, "n_chips": MESH_CHIPS,
+                "scheduled_cycles": mnet.scheduled["cycles"],
+                "wgrad_shards": wgrad_shards,
+                "update_comm_cycles": mupdate.comm_cycles}
+    print(f"[train/{mode}] {aid} @ {MESH_CHIPS} chips: wGrad shards "
+          f"{wgrad_shards}, grad all-reduce {mupdate.comm_cycles:.4g} cyc")
+
+    payload = {"mode": mode, "spec": spec.name, "rows": rows,
+               "dataflow_diffs": diff_rows, "mesh": mesh_row}
+    write_report("train_lm_workloads", payload)
+
+    # --reduced is the CI acceptance path (train-smoke): enforce the
+    # training contract instead of warning, so regressions fail the job.
+    if reduced:
+        for r in rows:
+            if r["bwd_macs"] != r["bwd_macs_closed_form"]:
+                raise RuntimeError(
+                    f"{r['model']}: backward MACs {r['bwd_macs']} != "
+                    f"closed form {r['bwd_macs_closed_form']}")
+            if r["scheduled_cycles"] > r["serial_cycles"]:
+                raise RuntimeError(
+                    f"{r['model']}: scheduled {r['scheduled_cycles']} > "
+                    f"serial {r['serial_cycles']} with written-residency "
+                    f"segments")
+        if not any(r["n_dataflow_differ"] for r in rows):
+            raise RuntimeError(
+                "no layer's optimal wGrad dataflow differs from its "
+                "forward layer's — the backward solves are degenerate")
+        aid = REDUCED_ARCHS[0]
+        mesh1 = optimize_network(
+            list(work.layers), mesh=make_mesh(chip, 1), mode=mode,
+            counts=list(work.counts), per_layer_cap_s=cap, workers=workers)
+        single = nets[aid]
+        if mesh1.totals != single.totals or \
+                mesh1.scheduled != single.scheduled:
+            raise RuntimeError(
+                f"1-chip mesh training run is not the single chip: totals "
+                f"{mesh1.totals} vs {single.totals}, scheduled "
+                f"{mesh1.scheduled} vs {single.scheduled}")
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="quick solver caps (implied by --reduced)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="quick caps + CI acceptance gates (train-smoke)")
+    ap.add_argument("--budget", type=float, default=60.0,
+                    help="per-layer MIP cap (seconds; quick mode clamps)")
+    ap.add_argument("--mode", default="miredo")
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    run(budget_s=args.budget, quick=args.quick, reduced=args.reduced,
+        mode=args.mode, workers=args.workers)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

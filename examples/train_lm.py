@@ -7,6 +7,15 @@ checkpoint/restart, WSD schedule) — on CPU with a width-reduced config.
 Loss must drop substantially (the synthetic stream is a learnable Markov
 process); the script asserts it and demonstrates a mid-run restart from
 the checkpoint.
+
+``--dataflow`` asks the CIM side of the same question serve_lm.py asks
+for decode: the exact training config that just ran is lowered through
+``optimize_training(kind="train")`` — forward + dGrad/wGrad GEMMs plus
+the once-per-step optimizer bill — and the optimized forward/backward
+mappings are printed side by side, with the lowered token and parameter
+counts asserted against the live model.
+
+    PYTHONPATH=src python examples/train_lm.py --dataflow
 """
 
 import argparse
@@ -23,7 +32,15 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dataflow", action="store_true",
+                    help="short training run + MIREDO-optimized "
+                         "fwd/dGrad/wGrad dataflow report for this exact "
+                         "training config")
     args = ap.parse_args()
+    if args.dataflow:
+        dataflow_demo(args)
+        print("OK: training dataflow report matches the live model.")
+        return
     ckpt_dir = tempfile.mkdtemp(prefix="repro_ckpt_")
     try:
         # Phase 1: train to 60% of steps, checkpointing.
@@ -49,6 +66,93 @@ def main():
         print("OK: loss decreased through a checkpoint restart.")
     finally:
         shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def dataflow_demo(args, budget_s: float = 2.0):
+    """Train briefly, then report the MIREDO-optimized training dataflow
+    for this exact config (mirroring serve_lm.report_cim_dataflow).
+
+    The lowered workload is cross-checked against the live model: the LM
+    head's training GEMMs must carry exactly the tokens of one step, and
+    the optimizer bill must cover exactly the live trainable matmul
+    parameters (the '/w' kernels plus the tied embedding table)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.base import ShapeSpec
+    from repro.core.arch import default_arch
+    from repro.core.training import (backward_dataflow_diffs, optimize_training,
+                                     phase_of)
+    from repro.train.steps import StepConfig, init_train_state
+
+    # A short real training run of the same (arch, seq, batch) config.
+    steps = max(10, min(args.steps, 40))
+    losses = train_main([
+        "--arch", "minicpm-2b", "--reduced", "--steps", str(steps),
+        "--batch", str(args.batch), "--seq", str(args.seq),
+    ])
+    assert len(losses) == steps
+
+    cfg = get_config("minicpm-2b").reduced()
+    spec = ShapeSpec("train_demo", args.seq, args.batch, kind="train")
+    # workers=1: this process already initialized JAX; forking a solver
+    # pool after that risks deadlock (see serve_lm.report_cim_dataflow).
+    res = optimize_training(cfg, spec, default_arch(),
+                            per_layer_cap_s=budget_s, workers=1)
+    net, update = res.net, res.update
+
+    # --- lowered-vs-live cross-checks -----------------------------------
+    # Tokens: the training LM head computes logits at every position, so
+    # its forward GEMM carries M = seq at count = batch — one step's
+    # tokens exactly.
+    (head,) = [lr for lr in net.layers
+               if lr.layer.name == f"{cfg.name}.lm_head"
+               and phase_of(lr.layer) == "fwd"]
+    lowered_tokens = head.layer.bound("N") * head.count
+    assert lowered_tokens == args.seq * args.batch, \
+        (lowered_tokens, args.seq * args.batch)
+    # Parameters: the optimizer bill must cover the live matmul kernels
+    # (every '/w' leaf) plus the embedding table (tied LM head; stored
+    # pre-padded to padded_vocab, matching the lowered head GEMM).
+    params = init_train_state(jax.random.PRNGKey(0), cfg,
+                              StepConfig(compute_dtype=jnp.float32)).params
+    live = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if name.endswith("/w") or ("embed" in name and "table" in name):
+            live += leaf.size
+    assert update.n_params == live, (update.n_params, live)
+
+    # --- the report ------------------------------------------------------
+    s = net.scheduled
+    print(f"\nCIM training dataflow for {cfg.name} "
+          f"(seq={args.seq}, batch={args.batch}): {len(net.layers)} GEMMs, "
+          f"{net.n_unique} unique solves")
+    print(f"cycle split: fwd {res.splits['fwd']:.3g} / "
+          f"dgrad {res.splits['dgrad']:.3g} / "
+          f"wgrad {res.splits['wgrad']:.3g}; optimizer update "
+          f"{update.total_cycles:.3g} cycles over {update.n_params} params")
+    print(f"multi-core schedule: {s['cycles']:.3g} cycles end-to-end "
+          f"({s['serial_cycles'] / max(s['cycles'], 1.0):.2f}x vs serial); "
+          f"one step = {res.step_cycles:.3g} cycles")
+    # heaviest forward GEMM and its backward pair, side by side
+    top = max((lr for lr in net.layers if phase_of(lr.layer) == "fwd"),
+              key=lambda lr: lr.edp * lr.count)
+    by_name = {lr.layer.name: lr for lr in net.layers}
+    # GEMM-speak (M x K) @ (K x N): loop-nest N=M, C=K(reduction), K=N
+    print(f"heaviest forward GEMM {top.layer.name} "
+          f"(M={top.layer.bound('N')}, N={top.layer.bound('K')}, "
+          f"K={top.layer.bound('C')}) x{top.count}:")
+    for suffix in ("", ".dgrad", ".wgrad"):
+        lr = by_name[top.layer.name + suffix]
+        mp = lr.record["mapping"]
+        print(f"  {suffix or '.fwd':7s} spatial {mp['spatial']} "
+              f"temporal {mp['temporal']}")
+    diffs = backward_dataflow_diffs(net)
+    differing = [d["layer"] for d in diffs if d["differs"]]
+    print(f"wGrad dataflow differs from forward on {len(differing)}/"
+          f"{len(diffs)} layers: {differing}")
 
 
 if __name__ == "__main__":

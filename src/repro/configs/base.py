@@ -136,7 +136,27 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
-    """One assigned input-shape cell."""
+    """One assigned input-shape cell.
+
+    How the kinds lower (`core/frontend.py`; M = GEMM rows, mult =
+    workload multiplicity, per instance of each weight-GEMM):
+
+    ========  ==============  ============  =================================
+    kind      M               mult          extras
+    ========  ==============  ============  =================================
+    train     seq_len         global_batch  + backward pass: one dGrad + one
+                                            wGrad per forward GEMM (same
+                                            multiplicities; MoE wGrads scale
+                                            to experts hit by seq_len*top_k
+                                            tokens), LM head at M = seq_len
+                                            (loss at every position), plus a
+                                            once-per-step optimizer bill
+                                            (`training.optimizer_update_cost`)
+    prefill   seq_len         global_batch  LM head at M = 1 (last position)
+    decode    global_batch    1             one token per sequence, batched
+                                            into a single MVM
+    ========  ==============  ============  =================================
+    """
     name: str
     seq_len: int
     global_batch: int
@@ -182,7 +202,9 @@ class ShapeSpec:
 
 
 SHAPES = {
+    "train_2k": ShapeSpec("train_2k", 2_048, 512, "train"),
     "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "train_8k": ShapeSpec("train_8k", 8_192, 128, "train"),
     "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
     "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),

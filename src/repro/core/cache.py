@@ -61,7 +61,15 @@ from repro.core.mapping import Mapping
 #     pick different shard choices). Mesh-level records additionally store
 #     the shard decomposition, which v5 keys could never address, and
 #     single-chip keys are unchanged except for the version prefix.
-CACHE_VERSION = 6
+# v7: the layer key grows the written-resident-operand field
+#     (`workload.Layer.weight_written`, the training frontend's wGrad
+#     GEMMs). The scheduler's residency basis and dedup both key on the
+#     structural layer key, and a wGrad layer whose bounds coincide with a
+#     forward layer's must never share that layer's basis or record — its
+#     stationary operand is produced per step, so residency packing and
+#     fill amortization do not apply. Read-weight layer keys are unchanged
+#     except for the version prefix.
+CACHE_VERSION = 7
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -125,13 +133,17 @@ def arch_cache_key(arch) -> str:
 
 
 def layer_cache_key(layer: wl.Layer) -> str:
-    """Structural key: loop bounds + stride, *not* the name — identical
-    shapes share cache entries and dedup to one solve. The bounds also fix
-    every scheduler-relevant derived quantity (the K*C*FY*FX weight
-    footprint `scheduler.weight_bytes` packs against), so the scheduler
-    introduces no additional key fields — only the v4 version bump."""
+    """Structural key: loop bounds + stride + ``weight_written``, *not*
+    the name — identical shapes share cache entries and dedup to one
+    solve. The bounds also fix every scheduler-relevant derived quantity
+    (the K*C*FY*FX weight footprint `scheduler.weight_bytes` packs
+    against), so the scheduler introduces no additional key fields — only
+    the v4 version bump. ``weight_written`` joined in v7: it flips the
+    scheduler's residency basis (`scheduler.weight_residency`), so a
+    wGrad layer must never alias a same-shaped forward layer."""
     dims = ",".join(f"{d}={layer.bound(d)}" for d in wl.DIMS)
-    return _digest(f"{dims}|s{layer.stride}")
+    return _digest(f"{dims}|s{layer.stride}"
+                   f"|wr{int(layer.weight_written)}")
 
 
 def config_cache_key(cfg) -> str:

@@ -111,6 +111,11 @@ def extract_workload(cfg: ModelConfig, spec: ShapeSpec) -> ModelWorkload:
     Plus the LM head for every family. Embedding lookups, norms, rotary,
     softmax, depthwise convs and attention score matmuls are non-MVM work
     (SIMD / attention unit) and are not extracted.
+
+    ``kind="train"`` additionally appends the backward pass: one dGrad +
+    one wGrad GEMM per forward GEMM in reversed order
+    (`training.backward_gemms` — transposed dims, MoE wGrads scaled to
+    the experts actually hit, LM head at M = every position).
     """
     m, inst = spec.m_tokens, spec.instance_count
     decode = spec.is_decode
@@ -162,6 +167,14 @@ def extract_workload(cfg: ModelConfig, spec: ShapeSpec) -> ModelWorkload:
     m_head = 1 if spec.kind == "prefill" else m
     out += lm_head_gemm(name, cfg.d_model, cfg.padded_vocab(), m_head,
                         count=inst)
+
+    # Training expands every forward GEMM into its dGrad + wGrad pair
+    # (reversed order, transposed dims, written-residency wGrads) — see
+    # `core/training.py`; the optimizer-step traffic is priced separately
+    # (`training.optimizer_update_cost`), not lowered as layers.
+    if spec.kind == "train":
+        from repro.core.training import backward_gemms
+        out += backward_gemms(out, cfg, spec)
     layers, counts = zip(*out)
     return ModelWorkload(model=name, scenario=spec.name, layers=layers,
                          counts=counts)

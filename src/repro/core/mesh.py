@@ -70,9 +70,19 @@ SPLIT_DIM = {SPLIT_N: "K", SPLIT_K: "C"}
 #: Operand byte widths at the mesh level: activations travel between chips
 #: as 8-bit requantized values (`arch.operand_bits` outer-hierarchy
 #: convention); split_k partial sums are exchanged pre-requantization at
-#: 32 bits (the all-reduce operates on accumulator precision).
+#: 32 bits (the all-reduce operates on accumulator precision). Weight
+#: gradients (the OUTPUT of a wGrad GEMM, `workload.OP_WGRAD`) leave the
+#: chip unquantized too — they feed the fp32 optimizer state
+#: (`train/optimizer.py`), not another MVM.
 ACT_BYTES = 1
 PSUM_BYTES = 4
+GRAD_BYTES = 4
+
+
+def out_bytes_per_elem(layer: wl.Layer) -> int:
+    """Inter-chip byte width of one OUTPUT element of ``layer``: fp32 for
+    weight-grad GEMMs, requantized INT8 activations otherwise."""
+    return GRAD_BYTES if layer.op == wl.OP_WGRAD else ACT_BYTES
 
 
 # ---------------------------------------------------------------------------
@@ -195,7 +205,8 @@ def shard_sub_layer(layer: wl.Layer, choice: str, n_chips: int) -> wl.Layer:
     dims = {k: layer.bound(k) for k in wl.DIMS}
     dims[d] = dims[d] // n_chips
     return wl.Layer(f"{layer.name}~{choice}{n_chips}", dims,
-                    stride=layer.stride, op=layer.op)
+                    stride=layer.stride, op=layer.op,
+                    weight_written=layer.weight_written)
 
 
 def shard_choices(layer: wl.Layer, mesh: MeshArch, *,
@@ -207,8 +218,20 @@ def shard_choices(layer: wl.Layer, mesh: MeshArch, *,
     `make_plan` applies per tensor class), so attention heads that do not
     divide the mesh and MoE ``E % n != 0`` banks fall back to valid
     chip-replicated placements instead of raising. Always contains
-    ``replicate``."""
-    from repro.sharding.rules import mesh_tp_choices
+    ``replicate``.
+
+    Weight-grad GEMMs (`workload.OP_WGRAD`) resolve through the FSDP
+    gradient rule instead (`sharding.rules.mesh_grad_choices`): split_n
+    is the FSDP sharded-gradient layout (each chip owns a 1/n grad shard
+    along the weight's output channels), split_k is data-parallel wGrad
+    over the token reduction dim with a ring all-reduce of the fp32
+    partial gradients (`shard_eval` already prices split_k's all-reduce
+    at accumulator width — exactly the DP gradient sync)."""
+    from repro.sharding.rules import mesh_grad_choices, mesh_tp_choices
+    if layer.op == wl.OP_WGRAD:
+        return mesh_grad_choices(mesh.n_chips,
+                                 out_channels=layer.bound("K"),
+                                 reduce_dim=layer.bound("C"))
     return mesh_tp_choices(mesh.n_chips,
                            out_channels=layer.bound("K"),
                            reduce_dim=layer.bound("C"),
@@ -234,7 +257,8 @@ def shard_eval(layer: wl.Layer, choice: str, mesh: MeshArch) -> ShardEval:
       * replicate — no inter-chip traffic (the host chip holds everything).
       * split_n   — every chip needs the full input (broadcast from the
         host over ``bcast_hops``) and returns its 1/n output slice
-        (gather: ``(n-1)/n`` of the output travels back).
+        (gather: ``(n-1)/n`` of the output travels back, at
+        `out_bytes_per_elem` width — fp32 for wGrad gradients).
       * split_k   — every chip needs its 1/n input slice (scatter:
         ``(n-1)/n`` of the input leaves the host) and the 32-bit partial
         outputs ring-all-reduce (2(n-1) steps of 1/n chunks).
@@ -250,7 +274,7 @@ def shard_eval(layer: wl.Layer, choice: str, mesh: MeshArch) -> ShardEval:
         return ShardEval(REPLICATE, layer, 1, 0.0, 0.0)
     link, hops = mesh.link, mesh.bcast_hops()
     in_bytes = layer.operand_elems(INPUT) * ACT_BYTES
-    out_bytes = layer.operand_elems(OUTPUT) * ACT_BYTES
+    out_bytes = layer.operand_elems(OUTPUT) * out_bytes_per_elem(layer)
     e = link.energy_pj_per_byte
     if choice == SPLIT_N:
         gather = out_bytes * (n - 1) / n

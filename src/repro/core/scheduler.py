@@ -72,6 +72,17 @@ Guarantees:
 Counts are treated as *distinct* weight sets (depth repeats). For
 batch-multiplicity counts the footprint is overcounted — a conservative
 simplification (fewer packing opportunities, never an infeasible one).
+
+Written-residency caveat (training workloads, `core/training.py`): a
+layer with ``weight_written`` set carries a stationary operand that is
+*produced* by the step that consumes it (a wGrad GEMM's resident operand
+is the activation gradient of this very step), so there is nothing to
+preload and keep resident across pipelined items — `weight_residency`
+returns (False, 0.0) for such layers regardless of the mapping, the
+greedy weight-stationary basis swap never engages, and the stage executes
+serially exactly as its record prices it (intra-layer fills included).
+Non-resident stages are serial singletons, so scheduled <= serial holds
+unchanged.
 """
 
 from __future__ import annotations
@@ -106,7 +117,14 @@ def weight_residency(mapping: Mapping, layer: wl.Layer,
     same `latency.operand_fill_hops` chain), so
     ``record cycles - fill_cycles`` is the per-item resident latency at
     full cores. Non-resident mappings return (False, 0.0): their weight
-    traffic lives inside the recursion and cannot be split out."""
+    traffic lives inside the recursion and cannot be split out.
+
+    A ``weight_written`` layer returns (False, 0.0) unconditionally: its
+    stationary operand is produced by the step itself (wGrad GEMMs), so
+    no mapping can make it preloadable — the residency record the packing
+    would amortize does not exist before the items run."""
+    if layer.weight_written:
+        return False, 0.0
     hops = operand_fill_hops(mapping, layer, arch, WEIGHT)
     if any(triggered for triggered, _ in hops):
         return False, 0.0
@@ -485,6 +503,11 @@ def schedule_network(layers: Sequence, arch: CimArch, *,
     for lr in layers:
         key = lr.key
         layers_of.setdefault(key, lr.layer)
+        if key not in basis_of:
+            if lr.layer.weight_written:
+                # produced stationary operand: never resident, and the
+                # greedy weight-stationary swap has nothing to offer
+                basis_of[key] = (False, 0.0, "record", 0.0)
         if key not in basis_of:
             mp = mapping_from_json(lr.record["mapping"])
             resident, fill = weight_residency(mp, lr.layer, arch)
@@ -893,7 +916,8 @@ def schedule_mesh(layers: Sequence, mesh, *,
     (``+ comm_cycles``, not core-scaled — link time does not shrink with
     cores) and segments pay per-item activation hops between
     differently-hosted adjacent stages."""
-    from repro.core.mesh import ACT_BYTES, REPLICATE, shard_sub_layer
+    from repro.core.mesh import (REPLICATE, out_bytes_per_elem,
+                                 shard_sub_layer)
     from repro.core.arch import OUTPUT
 
     if mesh.n_chips <= 1:
@@ -927,6 +951,9 @@ def schedule_mesh(layers: Sequence, mesh, *,
         chip_cycles = float(rec.get("chip_cycles", rec["cycles"]))
         chip_energy = float(rec.get("chip_energy_pj", rec["energy_pj"]))
         comm = float(rec.get("comm_cycles", 0.0))
+        if lr.key not in basis_of and sub.weight_written:
+            # produced stationary operand (wGrad shard): never resident
+            basis_of[lr.key] = (False, 0.0, "record", 0.0)
         if lr.key not in basis_of:
             mp = mapping_from_json(rec["mapping"])
             resident, fill = weight_residency(mp, sub, chip)
@@ -956,7 +983,8 @@ def schedule_mesh(layers: Sequence, mesh, *,
             sub_key=sub_key, choice=choice,
             span_all=choice != REPLICATE, n_active=n_active,
             comm_cycles=comm,
-            out_bytes=lr.layer.operand_elems(OUTPUT) * ACT_BYTES))
+            out_bytes=lr.layer.operand_elems(OUTPUT) *
+            out_bytes_per_elem(lr.layer)))
 
     # ---- DP over contiguous splits (schedule_network's, mesh budgets) -----
     n = len(stages)

@@ -54,10 +54,17 @@ def is_relevant(dim: str, operand: str) -> bool:
 #                   score/AV stage on kernels/flash_attention per block
 #   OP_SSD       -> SSD duality matmuls; the intra-chunk pair runs fused on
 #                   kernels/ssd_scan, the state GEMMs on matmul_int8
+#   OP_DGRAD     -> backward activation-grad GEMM (delta_X = delta_Y . W^T);
+#                   plain matmul_int8 on the executor
+#   OP_WGRAD     -> backward weight-grad GEMM (delta_W = X^T . delta_Y);
+#                   plain matmul_int8, but its macro-resident operand is
+#                   *produced* per step (``weight_written`` below)
 OP_GEMM = "gemm"
 OP_ATTENTION = "attention"
 OP_SSD = "ssd"
-OP_KINDS = (OP_GEMM, OP_ATTENTION, OP_SSD)
+OP_DGRAD = "dgrad"
+OP_WGRAD = "wgrad"
+OP_KINDS = (OP_GEMM, OP_ATTENTION, OP_SSD, OP_DGRAD, OP_WGRAD)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -65,14 +72,21 @@ class Layer:
     """One operator instance = loop bounds + stride + name (+ op kind).
 
     ``op`` tags the kernel family that executes this layer
-    (`core/executor.py`); it is display/dispatch metadata like ``name`` —
-    structural identity (`cache.layer_cache_key`, network dedup) covers
-    loop bounds and stride only."""
+    (`core/executor.py`); it is display/dispatch metadata like ``name``.
+    ``weight_written`` marks a layer whose macro-resident ("weight"-slot)
+    operand is *produced* by the step that uses it rather than preloaded
+    from DRAM — wGrad GEMMs (the stationary operand is an activation
+    gradient) and the backward of activation-activation matmuls. It IS
+    structural: the scheduler's residency basis and the formulation's
+    stationary-operand amortization are invalid for written operands, so
+    `cache.layer_cache_key` (network dedup, record cache, scheduler basis
+    memo) covers loop bounds + stride + weight_written."""
 
     name: str
     dims: TMapping[str, int]  # bound per canonical dim (>=1)
     stride: int = 1
     op: str = OP_GEMM
+    weight_written: bool = False
 
     def __post_init__(self):
         assert self.op in OP_KINDS, (self.name, self.op)
@@ -120,10 +134,11 @@ def conv(name: str, n: int, k: int, c: int, oy: int, ox: int,
                         "FY": fy, "FX": fx}, stride)
 
 
-def gemm(name: str, m: int, n_out: int, k_red: int,
-         op: str = OP_GEMM) -> Layer:
+def gemm(name: str, m: int, n_out: int, k_red: int, op: str = OP_GEMM,
+         weight_written: bool = False) -> Layer:
     """(m x k_red) @ (k_red x n_out)."""
-    return Layer(name, {"N": m, "K": n_out, "C": k_red}, op=op)
+    return Layer(name, {"N": m, "K": n_out, "C": k_red}, op=op,
+                 weight_written=weight_written)
 
 
 # ---------------------------------------------------------------------------

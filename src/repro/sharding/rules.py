@@ -232,6 +232,36 @@ def mesh_tp_choices(n_chips: int, *, out_channels: int, reduce_dim: int,
     return tuple(choices)
 
 
+def mesh_grad_choices(n_chips: int, *, out_channels: int,
+                      reduce_dim: int) -> tuple[str, ...]:
+    """Valid CIM-mesh shard choices for one weight-grad GEMM
+    (`workload.OP_WGRAD`, canonical dims N=K_fwd, K=N_fwd, C=M tokens) —
+    the FSDP side of the rules, mirroring the ``data`` axis strategy
+    `make_plan` applies to parameters/optimizer state:
+
+      * ``replicate`` — always valid: one chip computes the full gradient.
+      * ``split_n`` — FSDP sharded gradients: each chip computes the 1/n
+        slice of delta_W along the forward weight's output channels it
+        owns (the P("data", ...) parameter shard), when divisible.
+      * ``split_k`` — data parallelism: chips split the token reduction
+        dim and ring-all-reduce fp32 partial gradients (the classic DP
+        gradient sync; `mesh.shard_eval` prices the all-reduce at
+        accumulator width), when divisible.
+
+    No head/expert fallbacks: gradients have no attention-compute or
+    routing alignment constraint — a grad shard never has to follow the
+    head boundary the forward TP rule protects. Pure arithmetic, like
+    `mesh_tp_choices`."""
+    choices = [m_REPLICATE]
+    if n_chips <= 1:
+        return tuple(choices)
+    if out_channels % n_chips == 0 and out_channels >= n_chips:
+        choices.append(m_SPLIT_N)
+    if reduce_dim % n_chips == 0 and reduce_dim >= n_chips:
+        choices.append(m_SPLIT_K)
+    return tuple(choices)
+
+
 def make_plan(mesh: Mesh, cfg: ModelConfig, shape: ShapeSpec) -> ShardingPlan:
     axes = mesh.axis_names
     model_axis = "model"

@@ -1,0 +1,355 @@
+"""Training frontend (`core/training.py`): backward-pass lowering,
+optimizer-step pricing, written-residency scheduling and the mesh
+gradient path.
+
+Pinned closed-form regressions (dense backward exactly doubles the
+forward GEMM MACs; MoE wGrad only for the experts actually hit; LM-head
+dGrad M semantics) plus a property fuzz: every dGrad/wGrad mapping the
+MIP returns re-validates against eq. 9 with the transposed dims. Runs
+under ``hypothesis`` when available, else the seeded-random shim (the
+tier-1 fallback pattern from ``tests/test_mapping_fuzz.py``).
+"""
+
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                   # seeded fallback
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda rng: rng.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(seq):
+            return _Strategy(lambda rng: rng.choice(list(seq)))
+
+    st = _Strategies()
+
+    def given(*strategies):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(0)
+                n = getattr(fn, "_max_examples", 25)
+                for _ in range(n):
+                    fn(*args, *(s.draw(rng) for s in strategies), **kwargs)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(max_examples=25, **_kwargs):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+from repro.configs import get_config
+from repro.configs.base import ShapeSpec
+from repro.core import workload as wl
+from repro.core.arch import OPERANDS, default_arch
+from repro.core.cache import layer_cache_key
+from repro.core.frontend import extract_workload
+from repro.core.mapping import validate
+from repro.core.mesh import make_mesh
+from repro.core.network import optimize_network
+from repro.core.scheduler import weight_residency
+from repro.core.training import (backward_dataflow_diffs, backward_gemms,
+                                 cycle_splits, dataflow_signature,
+                                 optimizer_update_cost, phase_of,
+                                 routed_hit_experts, trainable_params,
+                                 update_bytes_per_param)
+
+ARCH = default_arch()
+SPEC = ShapeSpec("t_train", 64, 2, "train")
+
+
+def _pairs(work):
+    return list(zip(work.layers, work.counts))
+
+
+def _phase(work, phase):
+    return [(l, c) for l, c in _pairs(work) if phase_of(l) == phase]
+
+
+def _macs(pairs):
+    return sum(l.macs * c for l, c in pairs)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form backward regressions
+# ---------------------------------------------------------------------------
+
+def test_dense_backward_exactly_doubles_forward():
+    """Dense model: dGrad + wGrad each mirror their forward GEMM's MACs,
+    and the embedding path contributes zero MACs on both sides — so the
+    backward total is exactly 2x the forward GEMM total."""
+    work = extract_workload(get_config("minicpm-2b").reduced(), SPEC)
+    fwd, dgrad, wgrad = (_phase(work, p) for p in ("fwd", "dgrad", "wgrad"))
+    assert _macs(dgrad) == _macs(fwd)
+    assert _macs(wgrad) == _macs(fwd)
+    assert _macs(dgrad) + _macs(wgrad) == 2 * _macs(fwd)
+
+
+def test_moe_wgrad_only_for_hit_experts():
+    """Routed experts: dGrad mirrors the forward multiplicities, but the
+    wGrad count scales to min(E, m*top_k) — an expert no token landed on
+    accumulates no weight gradient."""
+    cfg = get_config("qwen2-moe-a2.7b").reduced()
+    spec = ShapeSpec("t_tiny", 2, 1, "train")   # 2 tokens x top_k=2 < E=8
+    n_hit = routed_hit_experts(cfg, spec.m_tokens)
+    assert 0 < n_hit < cfg.n_experts
+    work = extract_workload(cfg, spec)
+    by_name = {}
+    for l, c in _pairs(work):
+        by_name.setdefault(l.name, 0)
+        by_name[l.name] += c
+    for leaf in ("ffn_up", "ffn_down"):
+        base = f"{cfg.name}.blk.exp.{leaf}"
+        fwd_c = by_name[base]
+        assert by_name[f"{base}.dgrad"] == fwd_c
+        assert by_name[f"{base}.wgrad"] == fwd_c // cfg.n_experts * n_hit
+        # shared experts are always applied: full backward
+        shared = f"{cfg.name}.blk.shared.{leaf}"
+        assert by_name[f"{shared}.wgrad"] == by_name[shared]
+    # and the aggregate closed form: 2x forward minus the un-hit share
+    fwd = _phase(work, "fwd")
+    routed = _macs([(l, c) for l, c in fwd if ".exp." in l.name])
+    missed = routed * (cfg.n_experts - n_hit) // cfg.n_experts
+    assert _macs(_phase(work, "dgrad")) + _macs(_phase(work, "wgrad")) \
+        == 2 * _macs(fwd) - missed
+
+
+def test_lm_head_train_dgrad_m_semantics():
+    """Training computes the loss at every position, so the LM head's
+    forward GEMM carries M = seq — and its dGrad keeps M = seq while
+    swapping the vocab to the reduction dim (dX = dY . W^T)."""
+    cfg = get_config("minicpm-2b").reduced()
+    work = extract_workload(cfg, SPEC)
+    by_name = {l.name: l for l, _ in _pairs(work)}
+    head = by_name[f"{cfg.name}.lm_head"]
+    dg = by_name[f"{cfg.name}.lm_head.dgrad"]
+    wg = by_name[f"{cfg.name}.lm_head.wgrad"]
+    V, D, m = cfg.padded_vocab(), cfg.d_model, SPEC.seq_len
+    assert (head.bound("N"), head.bound("K"), head.bound("C")) == (m, V, D)
+    assert (dg.bound("N"), dg.bound("K"), dg.bound("C")) == (m, D, V)
+    assert (wg.bound("N"), wg.bound("K"), wg.bound("C")) == (D, V, m)
+
+
+def test_backward_stream_structure():
+    """Reversed order, one dGrad + one wGrad per forward GEMM, written
+    stationary operands marked, SSD (activation-activation) backward ops
+    tagged dGrad on both sides."""
+    for aid in ("minicpm-2b", "mamba2-1.3b"):
+        cfg = get_config(aid).reduced()
+        work = extract_workload(cfg, SPEC)
+        fwd = _phase(work, "fwd")
+        bwd = [(l, c) for l, c in _pairs(work) if phase_of(l) != "fwd"]
+        assert len(bwd) == 2 * len(fwd)
+        # reversed forward order: backward pairs walk the net back to front
+        assert [l.name.rsplit(".", 1)[0] for l, _ in bwd[::2]] \
+            == [l.name for l, _ in reversed(fwd)]
+        for (f, _fc), (dg, _), (wg, _) in zip(reversed(fwd), bwd[::2],
+                                              bwd[1::2]):
+            assert dg.name == f.name + ".dgrad"
+            assert wg.name == f.name + ".wgrad"
+            assert dg.macs == wg.macs == f.macs
+            assert wg.weight_written
+            if f.op == wl.OP_SSD:     # no weight anywhere in the pair
+                assert dg.op == wg.op == wl.OP_DGRAD
+                assert dg.weight_written
+            else:
+                assert dg.op == wl.OP_DGRAD and not dg.weight_written
+                assert wg.op == wl.OP_WGRAD
+
+
+def test_backward_requires_train_kind():
+    work = extract_workload(get_config("minicpm-2b").reduced(), SPEC)
+    with pytest.raises(AssertionError):
+        backward_gemms(_pairs(work), get_config("minicpm-2b").reduced(),
+                       ShapeSpec("d", 64, 2, "decode"))
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-step pricing
+# ---------------------------------------------------------------------------
+
+def test_optimizer_update_closed_form():
+    """Once per step: n_params counts each distinct weight set once
+    (count // inst), bytes = 21/param (fp32 grad read + 2 Adam moments
+    read+write + INT8 weight image write), cycles = bytes over the DRAM
+    bus, energy = bytes x (DRAM + GBuf) access energy."""
+    cfg = get_config("minicpm-2b").reduced()
+    work = extract_workload(cfg, SPEC)
+    up = optimizer_update_cost(_pairs(work), ARCH,
+                               inst=SPEC.instance_count)
+    d, h, kv = cfg.d_model, cfg.n_heads * cfg.resolved_head_dim, \
+        cfg.n_kv_heads * cfg.resolved_head_dim
+    per_layer = (d * h + h * d + 2 * d * kv                  # q, o, k, v
+                 + d * 2 * cfg.d_ff + cfg.d_ff * d)          # up(+gate), down
+    expected = cfg.n_layers * per_layer + cfg.padded_vocab() * d
+    assert up.n_params == expected
+    assert update_bytes_per_param() == 21
+    assert up.dram_bytes == 21 * expected
+    assert up.cycles == math.ceil(
+        up.dram_bytes / ARCH.level(0).bytes_per_cycle())
+    e_hop = ARCH.level(0).access_energy_pj_per_byte \
+        + ARCH.level(1).access_energy_pj_per_byte
+    assert up.energy_pj == pytest.approx(up.dram_bytes * e_hop)
+    assert up.comm_cycles == 0.0 and up.total_cycles == up.cycles
+
+
+def test_update_is_batch_invariant_and_skips_gradless_ops():
+    """Doubling the batch doubles the GEMM counts but not the parameter
+    count (weights are shared across instances), and backward / SSD
+    activation-activation layers carry no optimizer state."""
+    cfg = get_config("mamba2-1.3b").reduced()
+    for b in (1, 4):
+        spec = ShapeSpec("t", 64, b, "train")
+        work = extract_workload(cfg, spec)
+        n = trainable_params(_pairs(work), inst=spec.instance_count)
+        if b == 1:
+            n1 = n
+        assert n == n1
+    fwd_only = _phase(extract_workload(cfg, SPEC), "fwd")
+    weightless = [(l, c) for l, c in fwd_only if l.op == wl.OP_SSD]
+    assert weightless, "reduced mamba2 must lower SSD duality matmuls"
+    assert trainable_params(fwd_only, inst=SPEC.instance_count) == n1
+
+
+def test_mesh_update_adds_gradient_collective():
+    from repro.core.latency import ring_allreduce_cycles
+    from repro.core.training import GRAD_BYTES
+    cfg = get_config("minicpm-2b").reduced()
+    pairs = _pairs(extract_workload(cfg, SPEC))
+    mesh = make_mesh(ARCH, 2)
+    up1 = optimizer_update_cost(pairs, make_mesh(ARCH, 1),
+                                inst=SPEC.instance_count)
+    up2 = optimizer_update_cost(pairs, mesh, inst=SPEC.instance_count)
+    assert up1.comm_cycles == 0.0          # 1-chip mesh = single chip
+    assert up2.comm_cycles == ring_allreduce_cycles(
+        up2.n_params * GRAD_BYTES, mesh.link, 2) > 0
+    assert up2.comm_energy_pj > 0
+    assert (up1.n_params, up1.cycles) == (up2.n_params, up2.cycles)
+
+
+# ---------------------------------------------------------------------------
+# Written residency + cache identity
+# ---------------------------------------------------------------------------
+
+def test_written_layers_never_weight_resident():
+    """A produced stationary operand cannot be preloaded: residency is
+    denied for weight_written layers regardless of the mapping."""
+    from repro.core.baselines import greedy_mapping
+    fwd = wl.gemm("t.fc", 64, 64, 64)
+    wg = wl.gemm("t.fc.wgrad", 64, 64, 64, op=wl.OP_WGRAD,
+                 weight_written=True)
+    for layer, expect in ((fwd, True), (wg, False)):
+        mp = greedy_mapping(layer, ARCH)
+        resident, fill = weight_residency(mp, layer, ARCH)
+        if expect:
+            assert resident and fill > 0.0
+        else:
+            assert (resident, fill) == (False, 0.0)
+    # same bounds, different structural identity: a wGrad record must
+    # never serve a forward layer (or vice versa) — the v7 cache field
+    assert layer_cache_key(fwd) != layer_cache_key(wg)
+
+
+def test_training_schedule_and_mesh_n1_identity():
+    """End to end (fast greedy mode): scheduled <= serial holds with
+    written-residency segments in the stream, and the 1-chip mesh
+    training run is bit-identical to the single-chip path."""
+    cfg = get_config("minicpm-2b").reduced()
+    work = extract_workload(cfg, ShapeSpec("t_small", 16, 2, "train"))
+    single = optimize_network(list(work.layers), ARCH, "greedy",
+                              counts=list(work.counts), workers=1)
+    s = single.scheduled
+    assert s["cycles"] <= s["serial_cycles"]
+    meshed = optimize_network(list(work.layers), mesh=make_mesh(ARCH, 1),
+                              mode="greedy", counts=list(work.counts),
+                              workers=1)
+    assert meshed.totals == single.totals
+    assert meshed.scheduled == single.scheduled
+    splits = cycle_splits(single)
+    assert all(v > 0 for v in splits.values())
+    diffs = backward_dataflow_diffs(single)
+    assert len(diffs) == sum(1 for l in work.layers
+                             if l.op == wl.OP_WGRAD)
+
+
+# ---------------------------------------------------------------------------
+# Property fuzz: MIP mappings for backward layers re-validate vs eq. 9
+# ---------------------------------------------------------------------------
+
+def _assert_legal(mp, layer, arch):
+    """Independent re-derivation of the legality contract (the
+    test_mapping_fuzz.py checks, applied to transposed backward dims)."""
+    assert validate(mp, layer, arch) == [], validate(mp, layer, arch)
+    for d in wl.DIMS:
+        prod = math.prod(f for dd, f in mp.temporal if dd == d)
+        for ax in arch.spatial:
+            prod *= mp.spatial_extent(ax.name, d)
+        assert prod == layer.bound(d), (d, prod, layer.bound(d))
+    for ax in arch.spatial:
+        assert mp.spatial_extent(ax.name) <= ax.size
+        for d, _f in mp.spatial.get(ax.name, ()):
+            assert d in ax.dims, (ax.name, d)
+    # eq. (9): (1 + psi^DM) x stored bytes within (aggregated) capacity
+    for m in range(arch.n_levels):
+        cap = mp.eff_capacity(arch, m)
+        if cap is None:
+            continue
+        sizes = {}
+        for lam in OPERANDS:
+            if m not in mp.used_levels(lam) or not arch.serves(m, lam):
+                continue
+            mult = 2 if mp.is_double_buffered(lam, m, arch) else 1
+            sizes[lam] = mult * mp.stored_bytes(layer, lam, arch, m)
+        if arch.level(m).shared:
+            assert sum(sizes.values()) <= cap + 1e-6
+        else:
+            for sz in sizes.values():
+                assert sz <= cap + 1e-6
+    if mp.n_slots():
+        assert mp.deepest_used("W") <= arch.macro_level
+
+
+DIM_CHOICES = (3, 8, 24, 64, 128, 360)
+
+
+@given(st.sampled_from(DIM_CHOICES), st.sampled_from(DIM_CHOICES),
+       st.sampled_from(DIM_CHOICES))
+@settings(max_examples=4, deadline=None)
+def test_fuzz_backward_mip_mappings_legal(m, n_out, k_red):
+    """Every dGrad/wGrad mapping the MIP returns satisfies eq. 9 and the
+    spatial-legality contract with the *transposed* dims, and its
+    role-space signature is derivable (the benchmark headline's input)."""
+    from repro.core.formulation import FormulationConfig, optimize_layer
+    from repro.core.cache import mapping_to_json
+    cfg = get_config("minicpm-2b").reduced()     # dense: no MoE scaling
+    fwd = wl.gemm("fz.fc", m, n_out, k_red)
+    bwd = backward_gemms([(fwd, 1)], cfg,
+                         ShapeSpec("fz", m, 1, "train"))
+    assert [dict(l.dims) for l, _ in bwd] == [
+        {"N": m, "K": k_red, "C": n_out},       # dGrad: dX = dY . W^T
+        {"N": k_red, "K": n_out, "C": m},       # wGrad: dW = X^T . dY
+    ]
+    fcfg = FormulationConfig(time_limit_s=1.0)
+    for layer, _c in bwd:
+        res = optimize_layer(layer, ARCH, fcfg)
+        assert res.mapping is not None, res.status
+        _assert_legal(res.mapping, layer, ARCH)
+        sig = dataflow_signature(mapping_to_json(res.mapping), layer.op)
+        roles = {r for _ax, rs in sig[0] for r in rs} | set(sig[1])
+        assert roles <= {"M", "N", "K"}
