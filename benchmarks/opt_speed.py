@@ -58,6 +58,20 @@ DSE_MIN_SPEEDUP = 5.0
 #: Best-of-N timing repeats.
 REPEATS = 3
 
+#: ``--portfolio`` mode: per-layer budget for both the single-solve
+#: baseline pass and the racing-portfolio pass (equal total budget — the
+#: ISSUE-10 gate condition). 3 s sits where the fine model misses its
+#: first integer point on the hard reduced-zoo layers but the coarse
+#: portfolio member's slice still lands one.
+PORTFOLIO_BUDGET_S = 3.0
+#: Wall-clock tolerance on the per-layer budget contract (process
+#: scheduling + one formulation build that straddles the deadline).
+PORTFOLIO_EPS_S = 0.75
+#: Reduced LM zoo for the portfolio gate: two decode workloads with
+#: structurally diverse GEMMs (attention/FFN/head + Mamba SSD).
+PORTFOLIO_MODELS = ("minicpm-2b", "mamba2-1.3b")
+PORTFOLIO_SCENARIOS = ("decode_32k",)
+
 
 def _pools(quick: bool) -> list[tuple[str, object, int]]:
     """(name, layer, pool size): one GEMM and one conv, sized so the jax
@@ -163,10 +177,152 @@ def _dse_cold_warm(cache_dir: str) -> dict:
             "frontier_archs": [p["arch"] for p in cold["frontier"]]}
 
 
+def _portfolio_layers():
+    """Unique layers of the reduced portfolio zoo, first-seen order."""
+    from repro.configs import get_config
+    from repro.core.frontend import extract_all
+    from repro.core.network import dedup_layers
+
+    pool = []
+    for aid in PORTFOLIO_MODELS:
+        cfg = get_config(aid).reduced()
+        for work in extract_all(cfg, PORTFOLIO_SCENARIOS).values():
+            pool.extend(work.layers)
+    unique, _ = dedup_layers(pool)
+    return unique
+
+
+def _portfolio_bench(budget_s: float = PORTFOLIO_BUDGET_S) -> dict:
+    """``--portfolio``: incumbent-unimproved rate, single solve vs racing
+    portfolio at equal per-layer budget (the ISSUE-10 tentpole gate).
+
+    Per unique reduced-zoo layer:
+
+      * **before** — one single-parameterization ``optimize_layer`` at
+        ``budget_s``;
+      * **after** — ``portfolio.race`` of the default K=3 grid at the same
+        ``budget_s``, seeded with the before-pass mapping (the portfolio's
+        incumbent-sharing mechanism), which makes "never worse than the
+        single solve" hold *by construction*;
+      * the race runs twice with identical seeds as a determinism probe.
+
+    Gates (RuntimeError on violation):
+
+      1. the unimproved rate (fraction of layers where the returned
+         mapping is not strictly better than the *native* greedy/heuristic
+         incumbent) strictly drops from before to after;
+      2. no layer's after-latency exceeds its before-latency;
+      3. every solve's wall clock stays within ``budget_s`` +
+         ``PORTFOLIO_EPS_S`` (the post-ladder-fix budget contract);
+      4. for layers whose winning member terminated deterministically
+         (OPTIMAL / INFEASIBLE — not at the wall-clock wire), both race
+         passes return bit-identical (winner, latency, mapping). Members
+         cut off by the clock are deterministic only up to machine load —
+         the *selection rule* is a pure function of member results either
+         way (DESIGN.md §Solver portfolio).
+    """
+    from repro.core.cache import mapping_to_json
+    from repro.core.formulation import FormulationConfig, optimize_layer
+    from repro.core.portfolio import default_portfolio, race
+
+    arch = default_arch()
+    fc = FormulationConfig(time_limit_s=budget_s)
+    pf = default_portfolio()
+    unique = _portfolio_layers()
+    print(f"[optspeed/portfolio] {len(unique)} unique layers, "
+          f"{budget_s:g}s/layer, grid "
+          f"{[m.name for m in pf.members]} (digest {pf.digest()})")
+
+    rows, layers_json = [], []
+    n_before = n_after = 0
+    budget_violations, worse, nondet = [], [], []
+    for ul in unique:
+        before = optimize_layer(ul, arch, fc)
+        out = race(ul, arch, fc, pf, warm_start=before.mapping)
+        out2 = race(ul, arch, fc, pf, warm_start=before.mapping)
+        after = out.result
+        n_before += before.improved
+        n_after += after.improved
+        if after.eval_latency > before.eval_latency:
+            worse.append(ul.name)
+        for tag, s in (("single", before.solve_seconds),
+                       ("portfolio", after.solve_seconds),
+                       ("portfolio-rerun", out2.result.solve_seconds)):
+            if s > budget_s + PORTFOLIO_EPS_S:
+                budget_violations.append(f"{ul.name}/{tag}: {s:.2f}s")
+        w1, w2 = out.members[out.winner], out2.members[out2.winner]
+        det_eligible = {w1.status, w2.status} <= {"OPTIMAL", "INFEASIBLE"}
+        det_same = (out.winner == out2.winner and
+                    out.result.eval_latency == out2.result.eval_latency and
+                    mapping_to_json(out.result.mapping) ==
+                    mapping_to_json(out2.result.mapping))
+        if det_eligible and not det_same:
+            nondet.append(ul.name)
+        rows.append([ul.name, f"{before.incumbent_latency:.0f}",
+                     f"{before.eval_latency:.0f}", int(before.improved),
+                     f"{after.eval_latency:.0f}", int(after.improved),
+                     out.members[out.winner].name])
+        layers_json.append({
+            "layer": ul.name,
+            "incumbent_cycles": before.incumbent_latency,
+            "before_cycles": before.eval_latency,
+            "before_improved": before.improved,
+            "before_s": round(before.solve_seconds, 2),
+            "after_cycles": after.eval_latency,
+            "after_improved": after.improved,
+            "after_s": round(after.solve_seconds, 2),
+            "winner": out.winner,
+            "winner_name": out.members[out.winner].name,
+            "deterministic_rerun": det_same,
+            "members": out.to_json()["members"],
+        })
+
+    n = len(unique)
+    rate_before = 1.0 - n_before / n
+    rate_after = 1.0 - n_after / n
+    print(md_table(["layer", "incumbent", "single", "imp",
+                    "portfolio", "imp", "winner"], rows))
+    print(f"[optspeed/portfolio] incumbent-unimproved rate: "
+          f"{rate_before:.3f} -> {rate_after:.3f} "
+          f"(gate: strict drop at equal {budget_s:g}s/layer budget)")
+    if worse:
+        raise RuntimeError(
+            f"[optspeed/portfolio] portfolio worse than single solve on: "
+            f"{worse}")
+    if budget_violations:
+        raise RuntimeError(
+            f"[optspeed/portfolio] budget contract violated "
+            f"(> {budget_s:g}+{PORTFOLIO_EPS_S:g}s): {budget_violations}")
+    if nondet:
+        raise RuntimeError(
+            f"[optspeed/portfolio] deterministically-terminated winners "
+            f"changed between identical-seed reruns on: {nondet}")
+    if not rate_after < rate_before:
+        raise RuntimeError(
+            f"[optspeed/portfolio] incumbent-unimproved rate did not "
+            f"strictly drop: {rate_before:.3f} -> {rate_after:.3f}")
+    return {"budget_s": budget_s, "eps_s": PORTFOLIO_EPS_S,
+            "models": list(PORTFOLIO_MODELS),
+            "scenarios": list(PORTFOLIO_SCENARIOS),
+            "grid": [m.name for m in pf.members],
+            "digest": pf.digest(),
+            "n_layers": n,
+            "rate_before": round(rate_before, 4),
+            "rate_after": round(rate_after, 4),
+            "layers": layers_json}
+
+
 def run(budget_s: float = 0.0, quick: bool = False, dse: bool = False,
-        cache_dir: str | None = None) -> dict:
+        portfolio: bool = False, cache_dir: str | None = None) -> dict:
     """``budget_s`` is accepted for harness uniformity; the pools are
-    fixed-size so the job's cost is set by ``quick`` and ``dse``."""
+    fixed-size so the job's cost is set by ``quick`` and ``dse``.
+    ``portfolio=True`` runs ONLY the solver-portfolio gate
+    (`_portfolio_bench`) — its zoo is already the reduced one, so
+    ``--reduced``/``--quick`` change nothing for it."""
+    if portfolio:
+        payload = {"portfolio": _portfolio_bench()}
+        write_report("opt_speed_portfolio", payload)
+        return payload
     arch = default_arch()
     rows, pools_json = [], {}
     best_ratio, best_where = 0.0, ""
@@ -231,8 +387,13 @@ def main(argv=None) -> int:
     ap.add_argument("--cache-dir", default=None,
                     help="persistent cache dir for --dse (default: fresh "
                          "temp dir, i.e. a true cold start)")
+    ap.add_argument("--portfolio", action="store_true",
+                    help="run only the racing-solver-portfolio gate: "
+                         "incumbent-unimproved rate before vs after on "
+                         "the reduced LM zoo at equal per-layer budget")
     args = ap.parse_args(argv)
-    run(quick=args.quick, dse=args.dse, cache_dir=args.cache_dir)
+    run(quick=args.quick, dse=args.dse, portfolio=args.portfolio,
+        cache_dir=args.cache_dir)
     return 0
 
 

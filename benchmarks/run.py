@@ -41,6 +41,11 @@ def main(argv=None):
     ap.add_argument("--cache-dir", default="",
                     help="persistent solve-record cache directory (sets "
                          "MIREDO_CACHE; default reports/cache)")
+    ap.add_argument("--portfolio", action="store_true",
+                    help="optspeed job only: run the racing-solver-"
+                         "portfolio gate (incumbent-unimproved rate "
+                         "before vs after at equal budget) instead of "
+                         "the throughput race")
     args = ap.parse_args(argv)
     if args.reduced:
         args.quick = True
@@ -87,8 +92,10 @@ def main(argv=None):
         ("exec", lambda: exec_lm.run(budget_s=budget, quick=args.quick,
                                      reduced=True)),
         # scalar-vs-batched throughput race + exact-agreement check; the
-        # cold/warm DSE timing is its standalone --dse flag (minutes).
-        ("optspeed", lambda: opt_speed.run(quick=args.quick)),
+        # cold/warm DSE timing is its standalone --dse flag (minutes) and
+        # the solver-portfolio gate its --portfolio flag.
+        ("optspeed", lambda: opt_speed.run(quick=args.quick,
+                                           portfolio=args.portfolio)),
         # Multi-chip mesh scaling: infeasible-on-one-chip model on 2-4
         # chips, TP sharding + (chip, core) placement
         # (benchmarks/mesh_scaling.py).

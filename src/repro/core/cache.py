@@ -69,7 +69,18 @@ from repro.core.mapping import Mapping
 #     stationary operand is produced per step, so residency packing and
 #     fill amortization do not apply. Read-weight layer keys are unchanged
 #     except for the version prefix.
-CACHE_VERSION = 7
+# v8: two key-space changes land together. (a) The key space grows an
+#     optional portfolio digest component (`core/portfolio.py` races K
+#     solver parameterizations per layer — a different member grid is a
+#     different solver, so `solve_record_key(..., portfolio=...)` appends
+#     ``__pf<digest>`` for MIP modes). (b) ``latency_slack`` is
+#     canonicalized to ``max(latency_slack, BIG_M_FLOOR)`` before keying:
+#     the big-M row uses exactly that floor
+#     (`formulation.solve_ladder`), so v7 keyed records that could never
+#     differ (e.g. slack 2.0 vs 4.0) apart. v7 records also predate the
+#     shared-deadline budget fix, so their ``solve_s`` no longer reflects
+#     the budget contract — retired wholesale.
+CACHE_VERSION = 8
 
 #: Modes whose solves run the MIP (and therefore depend on every solver
 #: field); baseline modes only consume the factorization knobs.
@@ -147,25 +158,42 @@ def layer_cache_key(layer: wl.Layer) -> str:
 
 
 def config_cache_key(cfg) -> str:
-    """Key over every result-affecting FormulationConfig field."""
+    """Key over every result-affecting FormulationConfig field.
+
+    ``latency_slack`` is canonicalized to ``max(latency_slack,
+    BIG_M_FLOOR)`` before keying: the solver applies exactly that floor to
+    the big-M scale (`formulation.solve_ladder`), so every slack value at
+    or below the floor produces the bit-identical solve — keying them
+    apart would store duplicate records that can never differ (v8)."""
+    from repro.core.formulation import BIG_M_FLOOR
+
+    items = dataclasses.asdict(cfg)
+    if "latency_slack" in items:
+        items["latency_slack"] = max(items["latency_slack"], BIG_M_FLOOR)
     items = sorted(
-        (k, v) for k, v in dataclasses.asdict(cfg).items()
-        if k not in _CFG_KEY_EXCLUDE)
+        (k, v) for k, v in items.items() if k not in _CFG_KEY_EXCLUDE)
     return _digest("|".join(f"{k}={v!r}" for k, v in items))
 
 
 def solve_record_key(mode: str, layer: wl.Layer, arch, cfg,
-                     warm_start: dict | None = None) -> str:
+                     warm_start: dict | None = None,
+                     portfolio=None) -> str:
     """``warm_start`` (a mapping JSON injected as a neighbor incumbent —
     incremental DSE re-solves) changes the solver's inputs, so warm-started
     records carry an extra digest component: they can never serve, or be
-    served by, the structural key of an independent cold solve."""
+    served by, the structural key of an independent cold solve. Likewise
+    ``portfolio`` (a `portfolio.Portfolio`): a different member grid is a
+    different solver, so its digest joins the key — for MIP modes only,
+    since baseline modes never run the MIP and must hit the same entry
+    regardless of the portfolio racing beside them (v8)."""
     if mode not in MIP_MODES:
         cfg = dataclasses.replace(cfg, **_NON_MIP_CANONICAL)
     key = (f"v{CACHE_VERSION}__{mode}__{layer_cache_key(layer)}"
            f"__{arch_cache_key(arch)}__{config_cache_key(cfg)}")
     if warm_start is not None:
         key += "__ws" + _digest(json.dumps(warm_start, sort_keys=True))
+    if portfolio is not None and mode in MIP_MODES:
+        key += "__pf" + portfolio.digest()
     return key
 
 
@@ -207,17 +235,23 @@ class ResultCache:
 # ---------------------------------------------------------------------------
 
 def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
-                cfg=None, warm_start: dict | None = None) -> dict:
+                cfg=None, warm_start: dict | None = None,
+                portfolio=None) -> dict:
     """One uncached solve. mode: 'miredo' | 'ws' | 'heuristic' | 'greedy' |
     'random'. Returns {mode, layer, mapping, cycles, energy_pj, edp,
-    spatial_util, temporal_util, solve_s, status}.
+    spatial_util, temporal_util, solve_s, status}; MIP-mode records
+    additionally carry {incumbent_cycles, improved} (the native
+    greedy/heuristic incumbent the MIP had to beat, and whether it did)
+    and, when a portfolio raced, {portfolio: {winner, members: [...]}}.
 
     MIP modes always return a feasible mapping: ``optimize_layer`` seeds the
     solve with the greedy/heuristic incumbent (warm start) and falls back to
     it when the time-capped solver finds nothing better. ``warm_start`` (a
     mapping JSON, e.g. a neighboring arch's solved mapping during
     incremental DSE) adds one more incumbent to that pool for MIP modes;
-    baseline modes ignore it.
+    baseline modes ignore it. ``portfolio`` (a `portfolio.Portfolio`) races
+    its members instead of the single-parameterization solve for MIP modes;
+    baseline modes ignore it too.
     """
     from repro.core.baselines import greedy_mapping, heuristic_search
     from repro.core.energy import evaluate_edp
@@ -226,12 +260,16 @@ def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
     cfg = cfg or FormulationConfig()
     ws = mapping_from_json(warm_start) if warm_start is not None else None
     t0 = time.monotonic()
-    if mode == "miredo":
-        res = optimize_layer(layer, arch, cfg, warm_start=ws)
-        mapping, status = res.mapping, res.status.name
-    elif mode == "ws":
-        c = dataclasses.replace(cfg, weight_stationary=True)
-        res = optimize_layer(layer, arch, c, warm_start=ws)
+    res = pf_out = None
+    if mode in MIP_MODES:
+        c = (dataclasses.replace(cfg, weight_stationary=True)
+             if mode == "ws" else cfg)
+        if portfolio is not None:
+            from repro.core.portfolio import race
+            pf_out = race(layer, arch, c, portfolio, warm_start=ws)
+            res = pf_out.result
+        else:
+            res = optimize_layer(layer, arch, c, warm_start=ws)
         mapping, status = res.mapping, res.status.name
     elif mode == "heuristic":
         r = heuristic_search(layer, arch, budget=2000, seed=0,
@@ -248,7 +286,7 @@ def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
         raise ValueError(mode)
     assert mapping is not None, (mode, layer.name)
     edp = evaluate_edp(mapping, layer, arch)
-    return {
+    rec = {
         "mode": mode,
         "layer": layer.name,
         "mapping": mapping_to_json(mapping),
@@ -260,6 +298,12 @@ def solve_layer(layer: wl.Layer, arch: CimArch, mode: str,
         "solve_s": round(time.monotonic() - t0, 1),
         "status": status,
     }
+    if res is not None:                      # MIP modes: solver diagnostics
+        rec["incumbent_cycles"] = res.incumbent_latency
+        rec["improved"] = res.improved
+    if pf_out is not None:
+        rec["portfolio"] = pf_out.to_json()
+    return rec
 
 
 def solve_cached(layer: wl.Layer, arch: CimArch, mode: str,

@@ -44,6 +44,15 @@ from repro.core.mip.model import LinExpr, MipModel, Status
 
 LOG2_M = 64.0  # big-M for log-domain equalities (log2 of any bound << 64)
 
+#: Floor multiplier for the latency big-M: ``M_L = max(latency_slack,
+#: BIG_M_FLOOR) * UB``. Recursion rows sum up to four latency terms (e.g.
+#: ``P >= cd*L + 2T + MX``), so 4x the incumbent latency is the smallest
+#: region that provably never clips a candidate the prune row
+#: (``PMAX <= UB*1.001``) would keep. ``latency_slack`` values at or below
+#: the floor are therefore equivalent by construction — the cache key
+#: canonicalizes them (`cache.config_cache_key`) so they share records.
+BIG_M_FLOOR = 4.0
+
 
 class ComboOverflow(RuntimeError):
     """Size-combo enumeration exceeded the cap; retry with coarser factors."""
@@ -58,7 +67,11 @@ class FormulationConfig:
     time_limit_s: float = 60.0
     mip_rel_gap: float = 0.02
     combo_cap: int = 4096
-    latency_slack: float = 8.0    # M_L = slack * greedy latency
+    #: Latency big-M multiplier: ``M_L = max(latency_slack, BIG_M_FLOOR) *
+    #: incumbent latency``. Values above the floor loosen the LP relaxation
+    #: (see DESIGN.md §Decisions); values at/below it are floored and share
+    #: cache records (`cache.config_cache_key` canonicalizes).
+    latency_slack: float = 8.0
     weight_stationary: bool = False   # WS baseline (§V-A) extra constraints
     verbose: bool = False
 
@@ -74,6 +87,21 @@ class MiredoResult:
     n_vars: int
     n_rows: int
     mip_gap: float
+    #: Best *native* incumbent latency (greedy/heuristic pool, excluding
+    #: any injected neighbor warm start): the baseline of the
+    #: incumbent-unimproved metric (`benchmarks/opt_speed.py --portfolio`).
+    incumbent_latency: float = math.nan
+    #: Solver diagnostics at termination (NaN when not reported): nodes
+    #: explored and best dual bound — what makes a losing portfolio member
+    #: explainable (starved vs exhausted region).
+    mip_node_count: float = math.nan
+    mip_dual_bound: float = math.nan
+
+    @property
+    def improved(self) -> bool:
+        """Did the MIP beat the native warm-start incumbent?"""
+        return (math.isfinite(self.incumbent_latency)
+                and self.eval_latency < self.incumbent_latency)
 
 
 class MiredoFormulation:
@@ -809,51 +837,96 @@ def mip_latency_of(layer: wl.Layer, arch: CimArch, mapping: Mapping,
     return sol[form.PMAX]
 
 
-def optimize_layer(layer: wl.Layer, arch: CimArch,
-                   cfg: FormulationConfig | None = None,
-                   warm_start: Mapping | None = None) -> MiredoResult:
-    """End-to-end: factorize -> build MIP -> solve -> decode -> re-score.
+def native_incumbents(layer: wl.Layer, arch: CimArch,
+                      cfg: FormulationConfig) -> list[tuple[float, Mapping]]:
+    """Greedy + accurate-heuristic incumbent pool, best first on ties.
 
-    The incumbent of a cheap accurate-model search provides (a) a valid upper
-    bound that prunes the branch-and-bound tree (PMAX <= UB) and (b) tight
-    big-M constants (any mapping worse than UB is never optimal). On combo
-    explosion the layer retries with progressively coarser Flexible
-    Factorization — the paper's own complexity-control knob.
-
-    ``warm_start`` optionally injects a mapping solved for a *neighboring*
-    architecture (incremental DSE re-solves): it is re-validated against
-    this arch, and — only when feasible here and strictly better than the
-    search incumbents — tightens the pruning UB and joins the fallback
-    pool. ``None`` leaves behavior exactly unchanged.
-    """
+    A stronger incumbent is pure upside: it tightens the MIP's pruning UB
+    and raises the floor of the time-capped fallback (~0.2s for 2000
+    accurate-model samples vs solver budgets in the tens of seconds).
+    Shared by the single solve and every portfolio member
+    (`core/portfolio.py` computes the pool once per layer)."""
     from repro.core.baselines import greedy_mapping, heuristic_search
-    cfg = cfg or FormulationConfig()
-    t0 = time.monotonic()
     greedy = greedy_mapping(layer, arch)
     g_lat = evaluate(greedy, layer, arch).total_cycles
-    # A stronger incumbent is pure upside: it tightens the MIP's pruning UB
-    # and raises the floor of the time-capped fallback (~0.2s for 2000
-    # accurate-model samples vs solver budgets in the tens of seconds).
     seed_res = heuristic_search(layer, arch, budget=2000, seed=1,
                                 accurate=True, k_min=cfg.k_min,
                                 alpha=cfg.alpha)
     # ties prefer the earlier entry: search incumbent, then greedy, then
-    # the neighbor warm start (matching the historical fallback choice)
-    incumbents = [(seed_res.eval_latency, seed_res.mapping),
-                  (g_lat, greedy)]
-    if warm_start is not None and not validate(warm_start, layer, arch):
-        incumbents.append(
-            (evaluate(warm_start, layer, arch).total_cycles, warm_start))
-    ub = min(l for l, _ in incumbents)
-    ladders = [
+    # (appended by the caller) any neighbor warm start — the historical
+    # fallback preference
+    return [(seed_res.eval_latency, seed_res.mapping), (g_lat, greedy)]
+
+
+def ladder_rungs(cfg: FormulationConfig) -> list[tuple[float, int]]:
+    """The Flexible-Factorization coarsening ladder: (alpha, k_min) per
+    rung, finest first. Rung indices are a portfolio-member dimension
+    (`portfolio.PortfolioMember.rung`)."""
+    return [
         (cfg.alpha, cfg.k_min),
         (max(cfg.alpha, 0.5), 2),
         (1.0, 1),
     ]
+
+
+def _fallback_result(incumbents, layer, arch, status, t0, *,
+                     incumbent_latency, form=None, sol=None) -> MiredoResult:
+    """Best-incumbent result for budget-exhausted / solution-less solves."""
+    fallback = min(incumbents, key=lambda lc: lc[0])[1]
+    rep = evaluate(fallback, layer, arch)
+    return MiredoResult(
+        mapping=fallback, status=status, objective=math.nan,
+        mip_latency=math.nan, eval_latency=rep.total_cycles,
+        solve_seconds=time.monotonic() - t0,
+        n_vars=form.m.n_vars if form is not None else 0,
+        n_rows=form.m.n_rows if form is not None else 0,
+        mip_gap=sol.mip_gap if sol is not None else math.nan,
+        incumbent_latency=incumbent_latency,
+        mip_node_count=sol.mip_node_count if sol is not None else math.nan,
+        mip_dual_bound=sol.mip_dual_bound if sol is not None else math.nan)
+
+
+def solve_ladder(layer: wl.Layer, arch: CimArch, cfg: FormulationConfig,
+                 incumbents: Sequence[tuple[float, Mapping]], *,
+                 t0: float, deadline: float,
+                 incumbent_latency: float | None = None,
+                 rung: int = 0, node_limit: int | None = None,
+                 presolve: bool | None = None,
+                 mip_rel_gap: float | None = None) -> MiredoResult:
+    """One parameterized pass down the factorization ladder under a hard
+    shared deadline.
+
+    **Budget contract** (the ISSUE-10 ladder fix): *every* rung — builds
+    included — is charged against the single ``deadline`` anchored at
+    ``t0``. A rung that starts after the deadline is skipped, and the solve
+    of the rung that does run gets exactly the remaining wall clock, so the
+    3-rung combo-overflow fallback can no longer spend
+    ``time_limit_s + ~10 s`` (each rung used to re-floor its budget at
+    ``max(min(5, limit), remaining)``), which broke
+    `network.allocate_budgets`' sum-to-total contract. When the deadline
+    expires before any solve lands, the best incumbent is returned
+    (`Status.ERROR`, the solution-less status) — never ``None``.
+
+    ``rung``/``node_limit``/``presolve``/``mip_rel_gap`` are the portfolio
+    member knobs (`core/portfolio.py`); the defaults reproduce the single
+    baseline solve. SUSPECT solves (numerical trouble with an assignment)
+    are decoded but only trusted if `mapping.validate` passes — the
+    validate/fallback path stays authoritative.
+    """
+    gap = cfg.mip_rel_gap if mip_rel_gap is None else mip_rel_gap
+    ub = min(l for l, _ in incumbents)
+    if incumbent_latency is None:
+        incumbent_latency = ub
+    m_lat = max(cfg.latency_slack, BIG_M_FLOOR) * ub
+    rungs = ladder_rungs(cfg)
+    rungs = rungs[min(rung, len(rungs) - 1):]
     last_exc: Exception | None = None
-    for alpha, k_min in ladders:
+    out_of_time = False
+    for alpha, k_min in rungs:
+        if time.monotonic() >= deadline:
+            out_of_time = True
+            break
         c = dataclasses.replace(cfg, alpha=alpha, k_min=k_min)
-        m_lat = max(cfg.latency_slack * ub, 4 * ub)
         try:
             form = MiredoFormulation(layer, arch, c)
             form.build(m_lat, m_lat)
@@ -862,24 +935,26 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
             continue
         # prune with the incumbent (+0.1% float slack)
         form.m.add_le(LinExpr({form.PMAX.idx: 1.0}), ub * 1.001)
-        budget = max(min(5.0, cfg.time_limit_s),
-                     cfg.time_limit_s - (time.monotonic() - t0))
-        sol = form.m.solve(time_limit_s=budget,
-                           mip_rel_gap=cfg.mip_rel_gap, verbose=cfg.verbose)
+        budget = max(0.0, deadline - time.monotonic())
+        sol = form.m.solve(time_limit_s=budget, mip_rel_gap=gap,
+                           verbose=cfg.verbose, node_limit=node_limit,
+                           presolve=presolve)
         dt = time.monotonic() - t0
-        if not sol.ok:
+        if not sol.usable:
             # UB mapping may not be representable at this factorization
             # granularity; fall back to the best incumbent.
-            fallback = min(incumbents, key=lambda lc: lc[0])[1]
-            rep = evaluate(fallback, layer, arch)
-            return MiredoResult(
-                mapping=fallback, status=sol.status, objective=math.nan,
-                mip_latency=math.nan, eval_latency=rep.total_cycles,
-                solve_seconds=dt, n_vars=form.m.n_vars,
-                n_rows=form.m.n_rows, mip_gap=sol.mip_gap)
+            return _fallback_result(incumbents, layer, arch, sol.status, t0,
+                                    incumbent_latency=incumbent_latency,
+                                    form=form, sol=sol)
         mapping = form.decode(sol)
         errs = validate(mapping, layer, arch)
         if errs:
+            if sol.status is Status.SUSPECT:
+                # numerical trouble produced a genuinely infeasible
+                # assignment: flagged, not fatal — keep the incumbent
+                return _fallback_result(
+                    incumbents, layer, arch, sol.status, t0,
+                    incumbent_latency=incumbent_latency, form=form, sol=sol)
             raise AssertionError(
                 f"MIP produced infeasible mapping for {layer.name}: {errs}")
         rep = evaluate(mapping, layer, arch)
@@ -893,5 +968,53 @@ def optimize_layer(layer: wl.Layer, arch: CimArch,
             mapping=mapping, status=sol.status, objective=sol.objective,
             mip_latency=sol[form.PMAX], eval_latency=rep.total_cycles,
             solve_seconds=dt, n_vars=form.m.n_vars, n_rows=form.m.n_rows,
-            mip_gap=sol.mip_gap)
-    raise last_exc or RuntimeError("no factorization ladder succeeded")
+            mip_gap=sol.mip_gap, incumbent_latency=incumbent_latency,
+            mip_node_count=sol.mip_node_count,
+            mip_dual_bound=sol.mip_dual_bound)
+    if out_of_time or last_exc is None:
+        # deadline exhausted (possibly before the first build): the
+        # incumbent is the answer the budget paid for
+        return _fallback_result(incumbents, layer, arch, Status.ERROR, t0,
+                                incumbent_latency=incumbent_latency)
+    raise last_exc
+
+
+def optimize_layer(layer: wl.Layer, arch: CimArch,
+                   cfg: FormulationConfig | None = None,
+                   warm_start: Mapping | None = None,
+                   portfolio=None) -> MiredoResult:
+    """End-to-end: factorize -> build MIP -> solve -> decode -> re-score.
+
+    The incumbent of a cheap accurate-model search provides (a) a valid upper
+    bound that prunes the branch-and-bound tree (PMAX <= UB) and (b) tight
+    big-M constants (any mapping worse than UB is never optimal). On combo
+    explosion the layer retries with progressively coarser Flexible
+    Factorization — the paper's own complexity-control knob — with all
+    rungs charged against ONE deadline of ``cfg.time_limit_s`` seconds from
+    entry (see `solve_ladder`).
+
+    ``warm_start`` optionally injects a mapping solved for a *neighboring*
+    architecture (incremental DSE re-solves): it is re-validated against
+    this arch, and — only when feasible here and strictly better than the
+    search incumbents — tightens the pruning UB and joins the fallback
+    pool. ``None`` leaves behavior exactly unchanged.
+
+    ``portfolio`` (a `portfolio.Portfolio`) races K deterministic solver
+    parameterizations inside the same ``cfg.time_limit_s`` budget, sharing
+    the best-known upper bound, and returns the best member's result by
+    ``(eval_latency, member_index)`` — see `core/portfolio.py`. ``None``
+    (default) runs the single baseline parameterization.
+    """
+    cfg = cfg or FormulationConfig()
+    if portfolio is not None:
+        from repro.core.portfolio import race
+        return race(layer, arch, cfg, portfolio, warm_start=warm_start).result
+    t0 = time.monotonic()
+    deadline = t0 + cfg.time_limit_s
+    incumbents = native_incumbents(layer, arch, cfg)
+    native_ub = min(l for l, _ in incumbents)
+    if warm_start is not None and not validate(warm_start, layer, arch):
+        incumbents.append(
+            (evaluate(warm_start, layer, arch).total_cycles, warm_start))
+    return solve_ladder(layer, arch, cfg, incumbents, t0=t0,
+                        deadline=deadline, incumbent_latency=native_ub)

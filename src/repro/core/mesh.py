@@ -363,6 +363,7 @@ def optimize_mesh_network(layers: Sequence[wl.Layer], mesh: MeshArch,
                           schedule: bool = True,
                           schedule_boundaries: Sequence[int] | None = None,
                           warm_starts: dict[str, dict] | None = None,
+                          portfolio=None,
                           verbose: bool = False):
     """Mesh counterpart of `network.optimize_network` (which dispatches
     here for ``mesh=`` with ``n_chips > 1``; a 1-chip mesh takes the
@@ -424,7 +425,8 @@ def optimize_mesh_network(layers: Sequence[wl.Layer], mesh: MeshArch,
         total_budget_s = (DEFAULT_BUDGET_FRACTION * per_layer_cap_s *
                           len(pool))
     mesh_cfg = dataclasses.replace(base_cfg, time_limit_s=total_budget_s)
-    mesh_key = {k: solve_record_key(mode, ul, mesh, mesh_cfg)
+    mesh_key = {k: solve_record_key(mode, ul, mesh, mesh_cfg,
+                                    portfolio=portfolio)
                 for ul, k in ((u, layer_cache_key(u)) for u in unique)}
     records: dict[str, dict] = {}
     if cache is not None:
@@ -443,7 +445,8 @@ def optimize_mesh_network(layers: Sequence[wl.Layer], mesh: MeshArch,
             total_budget_s=total_budget_s,
             per_layer_cap_s=per_layer_cap_s, workers=workers,
             cache=cache, use_cache=use_cache, schedule=False,
-            warm_starts=warm_starts, verbose=verbose)
+            warm_starts=warm_starts, portfolio=portfolio,
+            verbose=verbose)
         sub_records = {lr.key: lr.record for lr in inner.layers}
         budgets = inner.budgets
         for ul in unique:

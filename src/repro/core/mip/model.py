@@ -25,6 +25,35 @@ class Status(enum.Enum):
     INFEASIBLE = 2
     UNBOUNDED = 3
     ERROR = 4
+    #: HiGHS reported a status outside the documented 0-3 range (e.g.
+    #: scipy's 4 = "numerical trouble") but still handed back an
+    #: assignment. The incumbent may violate constraints beyond feasibility
+    #: tolerances, so callers must re-validate/re-score it before trusting
+    #: it — exactly what `formulation.optimize_layer` does (decode ->
+    #: `mapping.validate` -> `latency.evaluate`, never-worse-than-incumbent
+    #: fallback). Mapped distinctly so such solves are *flagged* instead of
+    #: silently passing as FEASIBLE.
+    SUSPECT = 5
+
+
+def status_of(raw_status: int, has_solution: bool) -> Status:
+    """Map a scipy ``milp`` result status to `Status`.
+
+    scipy documents 0=optimal, 1=iteration/time limit, 2=infeasible,
+    3=unbounded, 4=other (e.g. numerical trouble). A limit-stopped solve
+    with an incumbent is FEASIBLE; any *undocumented* status that still
+    carries an assignment is SUSPECT (not FEASIBLE — see `Status.SUSPECT`);
+    no assignment at all is ERROR. Pinned by
+    ``tests/test_portfolio.py::test_status_mapping_table``."""
+    if raw_status == 0:
+        return Status.OPTIMAL
+    if raw_status == 1:
+        return Status.FEASIBLE if has_solution else Status.ERROR
+    if raw_status == 2:
+        return Status.INFEASIBLE
+    if raw_status == 3:
+        return Status.UNBOUNDED
+    return Status.SUSPECT if has_solution else Status.ERROR
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,7 +238,12 @@ class MipModel:
 
     # ---- solve -----------------------------------------------------------------
     def solve(self, time_limit_s: float = 60.0, mip_rel_gap: float = 0.01,
-              verbose: bool = False):
+              verbose: bool = False, node_limit: int | None = None,
+              presolve: bool | None = None):
+        """``node_limit`` caps branch-and-bound nodes (a *deterministic*
+        termination criterion — the solver portfolio's determinism lever,
+        `core/portfolio.py`); ``presolve`` toggles HiGHS presolve (None =
+        solver default, i.e. on)."""
         n = self.n_vars
         c = np.zeros(n)
         for i, v in self._obj.items():
@@ -227,31 +261,37 @@ class MipModel:
                                            np.array(self._rub))
         else:
             constraints = ()
+        # a negative limit would reach HiGHS as "unlimited" — clamp
+        options = {"time_limit": max(0.0, time_limit_s),
+                   "mip_rel_gap": mip_rel_gap,
+                   "disp": verbose}
+        if node_limit is not None:
+            options["node_limit"] = int(node_limit)
+        if presolve is not None:
+            options["presolve"] = bool(presolve)
         res = milp(
             c=c,
             constraints=constraints,
             integrality=np.array([1 if b else 0 for b in self._int]),
             bounds=Bounds(np.array(self._lb), np.array(self._ub)),
-            # a negative limit would reach HiGHS as "unlimited" — clamp
-            options={"time_limit": max(0.0, time_limit_s),
-                     "mip_rel_gap": mip_rel_gap,
-                     "disp": verbose},
+            options=options,
         )
-        if res.status == 0:
-            status = Status.OPTIMAL
-        elif res.status == 1 and res.x is not None:
-            status = Status.FEASIBLE
-        elif res.status == 2:
-            status = Status.INFEASIBLE
-        elif res.status == 3:
-            status = Status.UNBOUNDED
-        else:
-            status = Status.FEASIBLE if res.x is not None else Status.ERROR
+        status = status_of(res.status, res.x is not None)
+        gap = getattr(res, "mip_gap", math.nan)
         return Solution(status=status,
                         objective=(res.fun + self._obj_const)
                         if res.fun is not None else math.nan,
                         values=res.x, model=self,
-                        mip_gap=getattr(res, "mip_gap", math.nan))
+                        mip_gap=float(gap) if gap is not None else math.nan,
+                        raw_status=int(res.status),
+                        mip_node_count=_opt_float(
+                            getattr(res, "mip_node_count", None)),
+                        mip_dual_bound=_opt_float(
+                            getattr(res, "mip_dual_bound", None)))
+
+
+def _opt_float(v) -> float:
+    return float(v) if v is not None else math.nan
 
 
 @dataclasses.dataclass
@@ -261,6 +301,16 @@ class Solution:
     values: np.ndarray | None
     model: MipModel
     mip_gap: float = math.nan
+    #: scipy's untranslated result status — kept so a SUSPECT solve's
+    #: origin (e.g. 4 = numerical trouble) stays inspectable.
+    raw_status: int = -1
+    #: branch-and-bound nodes explored / best dual (lower) bound at
+    #: termination; NaN when HiGHS did not report them. These make a losing
+    #: portfolio member explainable: few nodes + weak bound = starved,
+    #: many nodes + tight bound = the region genuinely holds nothing
+    #: better (`core/portfolio.py`).
+    mip_node_count: float = math.nan
+    mip_dual_bound: float = math.nan
 
     def __getitem__(self, var: Var) -> float:
         assert self.values is not None
@@ -271,5 +321,19 @@ class Solution:
 
     @property
     def ok(self) -> bool:
+        """Trustworthy solve: OPTIMAL or a limit-stopped FEASIBLE incumbent.
+        Deliberately excludes SUSPECT so consumers that use the assignment
+        *without* independent re-validation (the scheduler/mesh placement
+        MIPs, `mip_latency_of`) treat numerical-trouble solves as failures
+        and take their fallback path."""
         return self.status in (Status.OPTIMAL, Status.FEASIBLE) and \
             self.values is not None
+
+    @property
+    def usable(self) -> bool:
+        """``ok`` plus SUSPECT-with-assignment: for callers that re-validate
+        and re-score the decoded result independently before trusting it
+        (`formulation.optimize_layer`'s decode -> validate -> evaluate ->
+        never-worse-than-incumbent path, which stays authoritative)."""
+        return self.ok or (self.status is Status.SUSPECT
+                           and self.values is not None)

@@ -33,6 +33,7 @@ from __future__ import annotations
 
 import concurrent.futures
 import dataclasses
+import multiprocessing
 import os
 import time
 from typing import Sequence
@@ -79,7 +80,15 @@ def allocate_budgets(layers: Sequence[wl.Layer], total_s: float,
     """Split ``total_s`` seconds across layers proportionally to MACs,
     clamped to [min_s, max_s]; clamp slack is redistributed to the
     remaining layers so the budgets always sum to ``total_s`` (up to the
-    hard bounds n*min_s / n*max_s)."""
+    hard bounds n*min_s / n*max_s).
+
+    The sum-to-total contract is only as good as the solver's respect for
+    each allocation: `formulation.solve_ladder` charges every fallback
+    rung — and `portfolio.race` every racing member — against ONE deadline
+    anchored at the solve's start, so a layer's wall clock stays within
+    its allocated seconds (+ scheduling epsilon) no matter how many rungs
+    or members run. (The pre-v8 ladder re-floored each rung at
+    ``min(5, time_limit_s)`` and could overshoot a 5 s budget 3×.)"""
     n = len(layers)
     if n == 0:
         return []
@@ -198,8 +207,10 @@ def _aggregate(layers: list[LayerResult]) -> dict[str, float]:
 
 def _solve_job(args):
     """Process-pool entry point (top-level: must be picklable)."""
-    layer, arch, mode, cfg, ws = args if len(args) == 5 else (*args, None)
-    return solve_layer(layer, arch, mode, cfg, warm_start=ws)
+    layer, arch, mode, cfg, *rest = args
+    ws = rest[0] if len(rest) > 0 else None
+    pf = rest[1] if len(rest) > 1 else None
+    return solve_layer(layer, arch, mode, cfg, warm_start=ws, portfolio=pf)
 
 
 def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
@@ -215,6 +226,7 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
                      schedule: bool = True,
                      schedule_boundaries: Sequence[int] | None = None,
                      warm_starts: dict[str, dict] | None = None,
+                     portfolio=None,
                      verbose: bool = False) -> NetworkResult:
     """Optimize every layer of a network and aggregate latency/energy/EDP.
 
@@ -231,6 +243,12 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
     `formulation.optimize_layer`). Warm-started solves cache under keys
     carrying a warm-start digest, so they never alias cold records.
     Baseline modes ignore warm starts entirely.
+
+    ``portfolio`` (a `portfolio.Portfolio`) replaces each MIP-mode layer
+    solve with a race of the portfolio's members inside the layer's
+    allocated budget (`core/portfolio.py`); the portfolio digest joins the
+    cache key so raced records never alias single-solve records. Baseline
+    modes ignore it.
 
     ``counts`` gives per-input-layer multiplicity (e.g. ResNet block repeat
     counts, transformer depth); identical layers dedup to one solve either
@@ -264,7 +282,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
                 per_layer_cap_s=per_layer_cap_s, workers=workers,
                 cache=cache, use_cache=use_cache, schedule=schedule,
                 schedule_boundaries=schedule_boundaries,
-                warm_starts=warm_starts, verbose=verbose)
+                warm_starts=warm_starts, portfolio=portfolio,
+                verbose=verbose)
         arch = mesh.chip
     assert arch is not None, "either arch or mesh is required"
 
@@ -315,7 +334,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
             ws = warm_starts.get(k) if warm_starts else None
             ws_of[k] = ws
             rec = cache.get(solve_record_key(mode, ul, arch, c,
-                                             warm_start=ws)) \
+                                             warm_start=ws,
+                                             portfolio=portfolio)) \
                 if cache else None
             if rec is not None:
                 records[k] = rec
@@ -332,10 +352,15 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
             to_solve,
             key=lambda l: -budgets.get(layer_cache_key(l), l.macs))
         jobs = [(l, arch, mode, cfg_of[layer_cache_key(l)],
-                 ws_of.get(layer_cache_key(l))) for l in order]
+                 ws_of.get(layer_cache_key(l)),
+                 portfolio if is_mip else None) for l in order]
         if nw > 1 and len(jobs) > 1:
+            # spawn, not fork: the batched analytical model runs jax in the
+            # parent, and forking a multithreaded jax process deadlocks the
+            # children (os.fork() + jax's internal threads).
             with concurrent.futures.ProcessPoolExecutor(
-                    max_workers=nw) as ex:
+                    max_workers=nw,
+                    mp_context=multiprocessing.get_context("spawn")) as ex:
                 out = list(ex.map(_solve_job, jobs))
         else:
             out = [_solve_job(j) for j in jobs]
@@ -344,7 +369,8 @@ def optimize_network(layers: Sequence[wl.Layer], arch: CimArch | None = None,
             records[k] = rec
             if cache is not None:
                 cache.put(solve_record_key(mode, l, arch, cfg_of[k],
-                                           warm_start=ws_of.get(k)), rec)
+                                           warm_start=ws_of.get(k),
+                                           portfolio=portfolio), rec)
             if verbose:
                 print(f"[network/{mode}] {l.name}: {rec['status']} "
                       f"{rec['cycles']:.3g} cyc in {rec['solve_s']}s")

@@ -165,6 +165,24 @@ def test_cache_key_covers_all_config_fields():
         config_cache_key(base)
 
 
+def test_cache_key_canonicalizes_aliased_latency_slack():
+    """``latency_slack`` values at or below BIG_M_FLOOR all build the same
+    big-M (``max(slack, floor) * UB``) — they are result-aliased, so they
+    must digest to ONE cache key; values above the floor stay distinct."""
+    from repro.core.formulation import BIG_M_FLOOR
+    base = FormulationConfig()          # default slack == 8.0, above floor
+    at_floor = dataclasses.replace(base, latency_slack=BIG_M_FLOOR)
+    below = dataclasses.replace(base, latency_slack=1.0)
+    lower = dataclasses.replace(base, latency_slack=2.0)
+    assert config_cache_key(at_floor) == config_cache_key(below) == \
+        config_cache_key(lower)
+    assert config_cache_key(base) != config_cache_key(at_floor)
+    assert solve_record_key("miredo", TINY, ARCH, below) == \
+        solve_record_key("miredo", TINY, ARCH, at_floor)
+    assert solve_record_key("miredo", TINY, ARCH, base) != \
+        solve_record_key("miredo", TINY, ARCH, at_floor)
+
+
 def test_baseline_mode_keys_ignore_solver_budget():
     """Heuristic/greedy solves don't consume the MIP budget: their cache
     keys must not change with it (else every benchmark budget re-runs the

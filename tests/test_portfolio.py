@@ -1,0 +1,281 @@
+"""Racing solver portfolio (core/portfolio.py) + the ISSUE-10 solver-budget
+contract fixes: ladder deadline sharing, scipy-status mapping (SUSPECT),
+portfolio determinism / cache-key separation / shared-incumbent guarantees.
+"""
+
+import copy
+import dataclasses
+import math
+import time
+
+import pytest
+
+from repro.core.arch import default_arch
+from repro.core.cache import solve_layer, solve_record_key
+from repro.core.formulation import (BIG_M_FLOOR, FormulationConfig,
+                                    MiredoResult, optimize_layer)
+from repro.core.mapping import validate
+from repro.core.mip.model import Solution, Status, status_of
+from repro.core.network import optimize_network
+from repro.core.portfolio import (Portfolio, PortfolioMember,
+                                  default_portfolio, race)
+from repro.core.workload import conv, gemm
+
+ARCH = default_arch()
+
+#: A portfolio whose members all terminate on optimality/infeasibility in
+#: milliseconds on tiny layers (coarse rungs only) — deterministic by
+#: construction, so reruns must be bit-identical.
+FAST_PF = Portfolio(members=(
+    PortfolioMember(name="c1", rung=1),
+    PortfolioMember(name="c2", rung=2),
+    PortfolioMember(name="c1g", rung=1, seed="greedy"),
+))
+
+
+# ---------------------------------------------------------------------------
+# scipy status mapping (Status.SUSPECT)
+# ---------------------------------------------------------------------------
+
+def test_status_mapping_table():
+    """The full raw-status x has-solution table, explicitly: status 4
+    (numerical trouble) with an assignment must surface as SUSPECT, not
+    silently pass as FEASIBLE (the pre-fix behavior)."""
+    assert status_of(0, True) is Status.OPTIMAL
+    assert status_of(0, False) is Status.OPTIMAL
+    assert status_of(1, True) is Status.FEASIBLE
+    assert status_of(1, False) is Status.ERROR
+    assert status_of(2, False) is Status.INFEASIBLE
+    assert status_of(3, False) is Status.UNBOUNDED
+    assert status_of(4, True) is Status.SUSPECT
+    assert status_of(4, False) is Status.ERROR
+    # unknown future scipy codes behave like status 4
+    assert status_of(99, True) is Status.SUSPECT
+    assert status_of(99, False) is Status.ERROR
+
+
+def test_suspect_usable_but_not_ok():
+    """`ok` keeps its conservative meaning (scheduler/mesh consume it
+    without re-validating); `usable` additionally admits SUSPECT so the
+    validate-then-fallback caller can inspect the assignment."""
+    sus = Solution(status=Status.SUSPECT, objective=1.0, values=[1.0],
+                   model=None, raw_status=4)
+    assert not sus.ok and sus.usable
+    ok = Solution(status=Status.OPTIMAL, objective=1.0, values=[1.0],
+                  model=None, raw_status=0)
+    assert ok.ok and ok.usable
+    err = Solution(status=Status.ERROR, objective=math.nan, values=None,
+                   model=None, raw_status=1)
+    assert not err.ok and not err.usable
+
+
+# ---------------------------------------------------------------------------
+# Budget contract (the ladder overshoot bugfix)
+# ---------------------------------------------------------------------------
+
+def test_forced_ladder_stays_within_budget():
+    """A combo_cap that overflows the finest rung forces the ladder to
+    coarsen mid-solve. Pre-fix, every rung re-floored its budget at
+    ``max(min(5, limit), remaining)`` so this solve could take
+    ``time_limit_s + ~10 s``; post-fix all rungs share one deadline.
+    (epsilon covers process scheduling plus HiGHS's internal clock-check
+    granularity.)"""
+    layer = conv("ladder", 1, 64, 64, 28, 28, 3, 3)
+    cfg = FormulationConfig(time_limit_s=5.0, combo_cap=800)
+    t0 = time.monotonic()
+    res = optimize_layer(layer, ARCH, cfg)
+    wall = time.monotonic() - t0
+    assert res.mapping is not None
+    assert not validate(res.mapping, layer, ARCH)
+    assert res.solve_seconds <= 5.0 + 1.0, res.solve_seconds
+    assert wall <= 5.0 + 1.0, wall
+
+
+def test_portfolio_race_stays_within_budget():
+    layer = gemm("pfbudget", 64, 128, 32)
+    cfg = FormulationConfig(time_limit_s=3.0)
+    t0 = time.monotonic()
+    out = race(layer, ARCH, cfg, default_portfolio())
+    wall = time.monotonic() - t0
+    assert out.result.solve_seconds <= 3.0 + 1.0
+    assert wall <= 3.0 + 1.0
+    # per-member slices are charged inside the same deadline
+    assert sum(m.solve_seconds for m in out.members) <= 3.0 + 1.0
+
+
+def test_expired_deadline_returns_incumbent_fallback():
+    """A zero budget must still return the (validated) incumbent — never
+    None, never a crash, and nearly instantly."""
+    layer = gemm("zb", 32, 64, 64)
+    cfg = FormulationConfig(time_limit_s=0.0)
+    res = optimize_layer(layer, ARCH, cfg)
+    assert res.mapping is not None
+    assert not validate(res.mapping, layer, ARCH)
+    assert res.status is Status.ERROR
+    assert res.eval_latency == res.incumbent_latency
+    assert not res.improved
+
+
+# ---------------------------------------------------------------------------
+# Portfolio determinism
+# ---------------------------------------------------------------------------
+
+#: Per-member fields that are legitimately timing-dependent (wall clock,
+#: and HiGHS diagnostics that depend on where the clock stopped it: gap,
+#: node count, dual bound — also NaN for fallback members, and NaN never
+#: compares equal). The determinism contract is everything else: winner,
+#: mapping, cycles, status.
+_TIMING_FIELDS = ("solve_seconds", "mip_gap", "mip_node_count",
+                  "mip_dual_bound")
+
+
+def _strip_times(outcome_json: dict) -> dict:
+    out = copy.deepcopy(outcome_json)
+    for m in out["members"]:
+        for f in _TIMING_FIELDS:
+            m.pop(f, None)
+    return out
+
+
+def test_race_rerun_bit_identical():
+    layer = gemm("det", 8, 16, 16)
+    cfg = FormulationConfig(time_limit_s=5.0)
+    a = race(layer, ARCH, cfg, FAST_PF)
+    b = race(layer, ARCH, cfg, FAST_PF)
+    assert a.winner == b.winner
+    assert a.result.eval_latency == b.result.eval_latency
+    assert a.result.mapping == b.result.mapping
+    assert a.result.status is b.result.status
+    assert _strip_times(a.to_json()) == _strip_times(b.to_json())
+    # every member terminated deterministically (not on the wall clock)
+    assert all(m.status in ("OPTIMAL", "INFEASIBLE") for m in a.members)
+
+
+def test_race_winner_prefers_earliest_member_on_tie():
+    """(eval_latency, member_index) ordering: duplicating the winning
+    member cannot move the win to the later copy."""
+    layer = gemm("tie", 8, 16, 16)
+    cfg = FormulationConfig(time_limit_s=5.0)
+    pf = Portfolio(members=(PortfolioMember(name="a", rung=1),
+                            PortfolioMember(name="b", rung=1)))
+    out = race(layer, ARCH, cfg, pf)
+    assert out.members[0].eval_latency == out.members[1].eval_latency
+    assert out.winner == 0
+
+
+def _strip_record_times(rec: dict) -> dict:
+    rec = copy.deepcopy(rec)
+    rec.pop("solve_s")
+    for f in _TIMING_FIELDS:
+        rec.pop(f, None)
+    for m in rec.get("portfolio", {}).get("members", ()):
+        for f in _TIMING_FIELDS:
+            m.pop(f, None)
+    return rec
+
+
+def test_network_portfolio_identical_across_worker_counts():
+    """The race runs inside ONE worker process per layer, so the winning
+    record must not depend on how many workers fan the layers out."""
+    layers = [gemm("w0", 8, 16, 16), gemm("w1", 16, 32, 8),
+              gemm("w2", 8, 8, 32)]
+    kw = dict(mode="miredo", cfg=FormulationConfig(time_limit_s=4.0),
+              use_cache=False, schedule=False, portfolio=FAST_PF)
+    r1 = optimize_network(layers, ARCH, workers=1, **kw)
+    r2 = optimize_network(layers, ARCH, workers=2, **kw)
+    for a, b in zip(r1.layers, r2.layers):
+        assert _strip_record_times(a.record) == _strip_record_times(b.record)
+
+
+# ---------------------------------------------------------------------------
+# Shared incumbents / never-worse guarantees
+# ---------------------------------------------------------------------------
+
+def test_race_seeded_with_single_solve_never_worse():
+    """The incumbent-sharing mechanism: a race seeded with the single
+    solve's mapping can never return a worse eval_latency than it (the
+    seed joins every member's pool and the fallback)."""
+    layer = gemm("seeded", 256, 512, 64)
+    cfg = FormulationConfig(time_limit_s=2.0)
+    single = optimize_layer(layer, ARCH, cfg)
+    out = race(layer, ARCH, cfg, default_portfolio(),
+               warm_start=single.mapping)
+    assert out.result.eval_latency <= single.eval_latency
+
+
+def test_member_sees_earlier_members_ub():
+    """A later member whose own seed is weak still races with the running
+    shared UB: its outcome can never be worse than what an earlier member
+    already found (the shared incumbent backstops its fallback)."""
+    layer = gemm("shared", 8, 16, 16)
+    cfg = FormulationConfig(time_limit_s=5.0)
+    out = race(layer, ARCH, cfg, FAST_PF)
+    best_so_far = math.inf
+    for m in out.members:
+        if m.status == "SKIPPED":
+            continue
+        assert m.eval_latency <= best_so_far or m.eval_latency == math.inf
+        best_so_far = min(best_so_far, m.eval_latency)
+
+
+def test_portfolio_result_never_worse_than_incumbent():
+    out = race(gemm("nw", 64, 128, 32), ARCH,
+               FormulationConfig(time_limit_s=1.0), default_portfolio())
+    assert out.result.eval_latency <= out.result.incumbent_latency
+
+
+# ---------------------------------------------------------------------------
+# Cache-key separation
+# ---------------------------------------------------------------------------
+
+def test_cache_key_separates_portfolio_configs():
+    layer = gemm("key", 32, 64, 64)
+    cfg = FormulationConfig(time_limit_s=5.0)
+    k_none = solve_record_key("miredo", layer, ARCH, cfg)
+    k_def = solve_record_key("miredo", layer, ARCH, cfg,
+                             portfolio=default_portfolio())
+    k_fast = solve_record_key("miredo", layer, ARCH, cfg, portfolio=FAST_PF)
+    assert len({k_none, k_def, k_fast}) == 3
+    # stable: the same grid digests to the same key
+    assert k_def == solve_record_key("miredo", layer, ARCH, cfg,
+                                     portfolio=default_portfolio())
+    # member order is result-affecting (slices, shared-UB flow, ties)
+    rev = Portfolio(members=tuple(reversed(default_portfolio().members)))
+    assert solve_record_key("miredo", layer, ARCH, cfg, portfolio=rev) != \
+        k_def
+    # baseline modes never run the MIP: the portfolio must not fork keys
+    assert solve_record_key("greedy", layer, ARCH, cfg,
+                            portfolio=default_portfolio()) == \
+        solve_record_key("greedy", layer, ARCH, cfg)
+
+
+def test_solve_layer_portfolio_record_fields():
+    rec = solve_layer(gemm("rec", 8, 16, 16), ARCH, "miredo",
+                      FormulationConfig(time_limit_s=4.0),
+                      portfolio=FAST_PF)
+    assert rec["status"] in ("OPTIMAL", "FEASIBLE", "INFEASIBLE", "ERROR")
+    assert math.isfinite(rec["incumbent_cycles"])
+    assert isinstance(rec["improved"], bool)
+    pf = rec["portfolio"]
+    assert pf["winner"] == 0 and len(pf["members"]) == len(FAST_PF.members)
+    assert rec["improved"] == (rec["cycles"] < rec["incumbent_cycles"])
+    # baseline modes ignore the portfolio and carry no solver diagnostics
+    base = solve_layer(gemm("rec", 8, 16, 16), ARCH, "greedy",
+                       FormulationConfig(), portfolio=FAST_PF)
+    assert "portfolio" not in base and "incumbent_cycles" not in base
+
+
+# ---------------------------------------------------------------------------
+# MiredoResult.improved
+# ---------------------------------------------------------------------------
+
+def test_improved_property():
+    base = dict(mapping=None, status=Status.OPTIMAL, objective=0.0,
+                mip_latency=1.0, solve_seconds=0.0, n_vars=0, n_rows=0,
+                mip_gap=0.0)
+    assert MiredoResult(eval_latency=90.0, incumbent_latency=100.0,
+                        **base).improved
+    assert not MiredoResult(eval_latency=100.0, incumbent_latency=100.0,
+                            **base).improved
+    # unknown incumbent -> never claims improvement
+    assert not MiredoResult(eval_latency=90.0, **base).improved
